@@ -1,0 +1,9 @@
+"""repro: Big text data clustering (BKC + Buckshot + K-Means) as a JAX TPU framework.
+
+Reproduction of Gerakidis, Megarchioti & Mamalis, "Efficient Big Text Data
+Clustering Algorithms using Hadoop and Spark" (2021), re-architected from
+Hadoop/Spark MapReduce onto JAX SPMD (shard_map + collectives + Pallas kernels),
+plus an LM model zoo used as a modern document-embedding front-end.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,35 @@
+"""The paper's primary contribution: big-text clustering algorithms in JAX.
+
+  kmeans      — spherical K-Means over the PKMeans map/combine/reduce pattern
+  bkc         — BigKClustering for documents (micro-clusters + joinToGroups)
+  buckshot    — sample -> single-link HAC -> few K-Means iterations
+  hac         — exact single-link via dense Prim MST + forest cut
+  metrics     — RSS / cosine objective / purity / NMI
+"""
+
+from repro.core.bkc import BKCResult, bkc, bkc_fit, join_to_groups
+from repro.core.buckshot import BuckshotResult, buckshot, buckshot_fit
+from repro.core.hac import mst_prim, single_link_labels
+from repro.core.kmeans import KMeansResult, kmeans, kmeans_fit, kmeans_step
+from repro.core.microcluster import MicroClusters, build_microclusters
+from repro.core import metrics, sampling
+
+__all__ = [
+    "BKCResult",
+    "BuckshotResult",
+    "KMeansResult",
+    "MicroClusters",
+    "bkc",
+    "bkc_fit",
+    "buckshot",
+    "buckshot_fit",
+    "build_microclusters",
+    "join_to_groups",
+    "kmeans",
+    "kmeans_fit",
+    "kmeans_step",
+    "metrics",
+    "mst_prim",
+    "sampling",
+    "single_link_labels",
+]

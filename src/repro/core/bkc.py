@@ -1,0 +1,165 @@
+"""BigKClustering for documents (paper §3, Fig. 1).
+
+Pipeline (two full passes over the data + tiny K x K group phase):
+  1. randomly select BigK centers from the dataset
+  2. assign all docs to most-similar center (pass 1)     [MR job 1: map]
+  3. build BigK micro-clusters                           [MR job 1: reduce]
+  4. connection similarity s0 = mean of min_i
+  5. joinToGroups: equivalence-relation components, adapt s until #groups == k
+                                                         [MR job 2: single reducer]
+  6. group centroids become the k final centers
+  7. assign all docs to final centers (pass 2)           [MR job 3]
+
+TPU adaptation of step 5 (DESIGN.md §2): the paper's sequential 'adapt s and
+re-scan' loop becomes a BISECTION on s over min-label-propagation connected
+components. #groups(s) is monotone non-decreasing in s, so bisection finds an
+exact-k threshold whenever one exists; otherwise we take the smallest s with
+#groups >= k and absorb the smallest surplus groups into their most similar
+anchor group (single shot, deterministic).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import l2_normalize
+from repro.core import metrics
+from repro.core.connected_components import compact_labels, label_components, num_components
+from repro.core.microcluster import MicroClusters, build_microclusters, pair_similarity
+from repro.kernels import ops
+
+
+class BKCResult(NamedTuple):
+    centers: jax.Array  # (k, d)
+    assignment: jax.Array  # (n,)
+    best_sim: jax.Array  # (n,)
+    rss: jax.Array
+    objective: jax.Array
+    group_of_mc: jax.Array  # (BigK,) final group id per micro-cluster
+    threshold: jax.Array  # connection similarity actually used
+
+
+def _adjacency(pair: jax.Array, escape: jax.Array, s: jax.Array, use_escape) -> jax.Array:
+    """Equivalence relation at threshold s (paper's joinToGroups conditions)."""
+    edge = jnp.logical_and(pair > 0.0, pair >= s)
+    return jnp.where(use_escape, jnp.logical_or(edge, escape), edge)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def _bisect_threshold(
+    pair: jax.Array, escape: jax.Array, k: int, use_escape, iters: int = 40
+) -> tuple[jax.Array, jax.Array]:
+    """Find s with #groups(s) == k if possible, else smallest s: #groups >= k.
+
+    Returns (s, n_groups_at_s). Monotonicity: raising s removes edges, so
+    #groups is non-decreasing in s.
+    """
+    lo = jnp.float32(0.0)  # all positive-sim edges on -> fewest groups
+    hi = jnp.max(pair) + 1e-3  # no threshold edges -> most groups
+
+    def groups_at(s):
+        return num_components(label_components(_adjacency(pair, escape, s, use_escape)))
+
+    def body(_, state):
+        lo, hi = state
+        mid = 0.5 * (lo + hi)
+        g = groups_at(mid)
+        # too few groups -> raise threshold; enough -> lower it to find boundary
+        lo = jnp.where(g < k, mid, lo)
+        hi = jnp.where(g < k, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return hi, groups_at(hi)  # hi always satisfies #groups >= k (or is max s)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def join_to_groups(mc: MicroClusters, k: int) -> tuple[jax.Array, jax.Array]:
+    """Paper Fig. 1 joinToGroups: group micro-clusters into exactly k groups.
+
+    Returns (group_id per micro-cluster in [0, k), threshold used). Invalid
+    (empty) micro-clusters get group k-1 (harmless: zero CF mass).
+    """
+    pair, escape = pair_similarity(mc)
+
+    # Escape-clause edges are s-independent; if they over-connect the graph so
+    # that even max-s yields < k groups, retry without them (then #groups can
+    # reach BigK >= k).
+    s_esc, g_esc = _bisect_threshold(pair, escape, k, jnp.bool_(True))
+    use_escape = g_esc >= k
+    s_val = jnp.where(use_escape, s_esc, 0.0)
+    s_noesc, _ = _bisect_threshold(pair, escape, k, jnp.bool_(False))
+    s = jnp.where(use_escape, s_val, s_noesc)
+
+    labels = label_components(_adjacency(pair, escape, s, use_escape))
+    dense = compact_labels(labels)  # [0, G)
+    big_k = pair.shape[0]
+
+    # Group mass and centroid directions (from CF1 sums).
+    g_n = jax.ops.segment_sum(mc.n, dense, num_segments=big_k)
+    g_cf1 = jax.ops.segment_sum(mc.cf1, dense, num_segments=big_k)
+    g_dir = l2_normalize(g_cf1)
+
+    # Keep the k heaviest groups as anchors; absorb the rest into the most
+    # similar anchor by centroid cosine. If G == k this is the identity.
+    order = jnp.argsort(-g_n)  # group ids sorted by size desc
+    anchor_rank = jnp.full((big_k,), big_k, dtype=jnp.int32)
+    anchor_rank = anchor_rank.at[order[:k]].set(jnp.arange(k, dtype=jnp.int32))
+    is_anchor = anchor_rank < k
+
+    sim_to_anchor = g_dir @ g_dir[order[:k]].T  # (G..., k)
+    nearest_anchor = jnp.argmax(sim_to_anchor, axis=1).astype(jnp.int32)
+    group_to_final = jnp.where(is_anchor, anchor_rank, nearest_anchor)
+
+    final = group_to_final[dense]
+    final = jnp.where(mc.valid, final, k - 1)
+    return final, s
+
+
+@functools.partial(jax.jit, static_argnames=("big_k", "k", "impl"))
+def bkc_fit(
+    x: jax.Array,
+    init_centers: jax.Array,
+    big_k: int,
+    k: int,
+    *,
+    impl: str = "xla",
+) -> BKCResult:
+    """Run BKC-for-documents given the BigK sampled center documents."""
+    mc, _, _ = build_microclusters(x, init_centers, big_k, impl=impl)
+    group, s = join_to_groups(mc, k)
+
+    # Step 6: centers of the groups = normalized sum of member CF1s.
+    sums = jax.ops.segment_sum(mc.cf1, group, num_segments=k)
+    counts = jax.ops.segment_sum(mc.n, group, num_segments=k)
+    centers = jnp.where(counts[:, None] > 0, l2_normalize(sums), 0.0)
+
+    # Step 7: final assignment pass (one K-Means-style iteration).
+    idx, best_sim = ops.assign_argmax(x, centers, impl=impl)
+    return BKCResult(
+        centers=centers,
+        assignment=idx,
+        best_sim=best_sim,
+        rss=metrics.rss(x, idx, k),
+        objective=metrics.cosine_objective(best_sim),
+        group_of_mc=group,
+        threshold=s,
+    )
+
+
+def bkc(
+    x: jax.Array,
+    big_k: int,
+    k: int,
+    key: jax.Array,
+    *,
+    impl: str = "xla",
+) -> BKCResult:
+    """Convenience entry point: sample BigK center documents, then fit."""
+    idx = jax.random.choice(key, x.shape[0], shape=(big_k,), replace=False)
+    centers = l2_normalize(x[idx])
+    return bkc_fit(x, centers, big_k, k, impl=impl)

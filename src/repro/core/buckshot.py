@@ -1,0 +1,75 @@
+"""Buckshot clustering for big text (paper §4, Fig. 2).
+
+  Phase 1 (cluster subroutine): sample s = sqrt(k n) docs, run single-link HAC
+    on the sample down to k clusters, take their centroids as initial centers.
+  Phase 2: K-Means-style assignment of the whole collection with only 2-3
+    iterations.
+
+The heavy O(s^2 d) part of phase 1 is the sample similarity matrix — a matmul
+(MXU); the HAC itself is the MST machinery in core/hac.py. Phase 2 reuses the
+PKMeans step (core/kmeans.py), exactly as the paper reuses its §2
+implementation 'for a fair comparison with BKC'.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import l2_normalize
+from repro.core import sampling
+from repro.core.hac import single_link_labels
+from repro.core.kmeans import KMeansResult, kmeans_fit
+from repro.kernels import ops
+
+
+class BuckshotResult(NamedTuple):
+    kmeans: KMeansResult
+    sample_idx: jax.Array  # (s,) indices of the HAC sample
+    sample_labels: jax.Array  # (s,) HAC cluster of each sampled doc
+    init_centers: jax.Array  # (k, d) centers handed to phase 2
+
+
+@functools.partial(jax.jit, static_argnames=("k", "kmeans_iters", "impl"))
+def buckshot_fit(
+    x: jax.Array,
+    sample_idx: jax.Array,
+    k: int,
+    *,
+    kmeans_iters: int = 3,
+    impl: str = "xla",
+) -> BuckshotResult:
+    """Run Buckshot given the sampled document indices (s static via shape)."""
+    xs = l2_normalize(x[sample_idx])
+    sim = xs @ xs.T  # cosine similarity of the sample (unit-norm rows)
+    labels = single_link_labels(sim, k)
+
+    sums, counts = ops.cluster_stats(xs, labels, k, impl=impl)
+    init_centers = jnp.where(counts[:, None] > 0, l2_normalize(sums), 0.0)
+
+    km = kmeans_fit(x, init_centers, k, max_iters=kmeans_iters, tol=0.0, impl=impl)
+    return BuckshotResult(
+        kmeans=km,
+        sample_idx=sample_idx,
+        sample_labels=labels,
+        init_centers=init_centers,
+    )
+
+
+def buckshot(
+    x: jax.Array,
+    k: int,
+    key: jax.Array,
+    *,
+    sample_size: int | None = None,
+    kmeans_iters: int = 3,
+    impl: str = "xla",
+) -> BuckshotResult:
+    """Paper defaults: s = sqrt(k n), 2-3 assignment iterations."""
+    n = x.shape[0]
+    s = sample_size or sampling.buckshot_sample_size(n, k)
+    sample_idx = sampling.sample_indices(key, n, s)
+    return buckshot_fit(x, sample_idx, k, kmeans_iters=kmeans_iters, impl=impl)

@@ -1,0 +1,116 @@
+"""Single-link hierarchical agglomerative clustering via MST (paper §4).
+
+Single-link HAC is equivalent to building the maximum-similarity spanning tree
+and cutting its k-1 weakest edges — that equivalence is what makes the paper's
+PARABLE-style 'local dendrograms + alignment' parallelizable, and what we
+exploit on TPU:
+
+  * ``mst_prim``: dense O(s^2) Prim inside jit (the sample is s = sqrt(kn),
+    small enough for one device).
+  * ``components_from_edges``: min-label propagation + pointer jumping over the
+    kept forest edges (jit, while_loop).
+  * distrib/hac_parallel.py lifts the per-round best-edge search onto the mesh
+    (Boruvka), using the same cut — the TPU version of dendrogram alignment.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG = jnp.finfo(jnp.float32).min
+
+
+@jax.jit
+def mst_prim(sim: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Maximum spanning tree of a dense similarity matrix.
+
+    Args:
+      sim: (s, s) symmetric similarity (diagonal ignored).
+
+    Returns:
+      (eu, ev, ew): (s-1,) arrays — edge endpoints and similarities, in the
+      order Prim added them.
+    """
+    s = sim.shape[0]
+    sim = sim.astype(jnp.float32)
+    in_tree = jnp.zeros((s,), bool).at[0].set(True)
+    best_sim = sim[0].at[0].set(NEG)  # best similarity from each node to tree
+    best_from = jnp.zeros((s,), jnp.int32)
+
+    def body(i, carry):
+        in_tree, best_sim, best_from, eu, ev, ew = carry
+        cand = jnp.where(in_tree, NEG, best_sim)
+        j = jnp.argmax(cand).astype(jnp.int32)
+        eu = eu.at[i].set(best_from[j])
+        ev = ev.at[i].set(j)
+        ew = ew.at[i].set(cand[j])
+        in_tree = in_tree.at[j].set(True)
+        better = sim[j] > best_sim
+        best_sim = jnp.where(better, sim[j], best_sim)
+        best_from = jnp.where(better, j, best_from)
+        return in_tree, best_sim, best_from, eu, ev, ew
+
+    init = (
+        in_tree,
+        best_sim,
+        best_from,
+        jnp.zeros((s - 1,), jnp.int32),
+        jnp.zeros((s - 1,), jnp.int32),
+        jnp.zeros((s - 1,), jnp.float32),
+    )
+    _, _, _, eu, ev, ew = jax.lax.fori_loop(0, s - 1, body, init)
+    return eu, ev, ew
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def components_from_edges(
+    n: int, eu: jax.Array, ev: jax.Array, mask: jax.Array
+) -> jax.Array:
+    """Min-id component labels of the graph with edges (eu[i], ev[i]) where
+    mask[i]. Edges form a forest here, but the routine is general."""
+    labels0 = jnp.arange(n, dtype=jnp.int32)
+    big = jnp.int32(n)
+
+    def cond(state):
+        _, changed = state
+        return changed
+
+    def body(state):
+        labels, _ = state
+        lu = labels[eu]
+        lv = labels[ev]
+        m = jnp.where(mask, jnp.minimum(lu, lv), big)
+        new = labels.at[eu].min(jnp.where(mask, m, big))
+        new = new.at[ev].min(jnp.where(mask, m, big))
+        new = jnp.minimum(new, new[new])  # pointer jumping
+        return new, jnp.any(new != labels)
+
+    labels, _ = jax.lax.while_loop(cond, body, (labels0, jnp.bool_(True)))
+    return labels
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def cut_forest(
+    eu: jax.Array, ev: jax.Array, ew: jax.Array, n: int | jax.Array, k: int
+) -> jax.Array:
+    """Cut the k-1 weakest MST edges -> exactly k components; dense labels."""
+    n = int(n) if not isinstance(n, jax.Array) else n
+    order = jnp.argsort(-ew)  # strongest first; stable -> deterministic ties
+    rank = jnp.argsort(order)  # rank[i] = position of edge i in that order
+    keep = rank < (eu.shape[0] + 1 - k)  # keep s-k strongest of s-1 edges
+    labels = components_from_edges(eu.shape[0] + 1, eu, ev, keep)
+    # densify to [0, k)
+    m = labels.shape[0]
+    is_root = labels == jnp.arange(m, dtype=labels.dtype)
+    dense = (jnp.cumsum(is_root.astype(jnp.int32)) - 1)[labels]
+    return dense
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def single_link_labels(sim: jax.Array, k: int) -> jax.Array:
+    """Exact single-link HAC cut at k clusters for a dense similarity matrix."""
+    eu, ev, ew = mst_prim(sim)
+    return cut_forest(eu, ev, ew, sim.shape[0], k)

@@ -1,0 +1,110 @@
+"""Spherical K-Means over the MapReduce pattern (PKMeans, Zhao et al. [26]).
+
+One iteration == one MapReduce job:
+  map     -> nearest center per document          (kernels.ops.assign_argmax)
+  combine -> per-shard cluster sums/counts        (kernels.ops.cluster_stats)
+  reduce  -> global new centers                   (psum in the distributed path)
+
+This module is the single-device reference; distrib/engine.py lifts the exact
+same step onto the mesh. Documents are expected L2-normalized (cosine semantics,
+paper §3.1); centers are renormalized after every update (spherical K-Means).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import l2_normalize
+from repro.core import metrics
+from repro.kernels import ops
+
+
+class KMeansResult(NamedTuple):
+    centers: jax.Array  # (k, d) unit-norm centers used for assignment
+    assignment: jax.Array  # (n,) int32
+    best_sim: jax.Array  # (n,) f32 cos(doc, center)
+    rss: jax.Array  # scalar Euclidean RSS vs member means
+    objective: jax.Array  # scalar cosine objective
+    iterations: jax.Array  # int32 iterations actually run
+
+
+def init_random_centers(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
+    """Paper's init: k documents drawn at random from the collection."""
+    idx = jax.random.choice(key, x.shape[0], shape=(k,), replace=False)
+    return l2_normalize(x[idx])
+
+
+@functools.partial(jax.jit, static_argnames=("k", "impl"))
+def kmeans_step(
+    x: jax.Array, centers: jax.Array, k: int, *, impl: str = "xla"
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One full map/combine/reduce iteration on one device.
+
+    Returns (new_centers, idx, best_sim, sums, counts).
+    """
+    idx, best_sim = ops.assign_argmax(x, centers, impl=impl)
+    sums, counts = ops.cluster_stats(x, idx, k, impl=impl)
+    means = sums / jnp.maximum(counts, 1.0)[:, None]
+    new_centers = jnp.where(counts[:, None] > 0, l2_normalize(means), centers)
+    return new_centers, idx, best_sim, sums, counts
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "max_iters", "impl")
+)
+def kmeans_fit(
+    x: jax.Array,
+    init_centers: jax.Array,
+    k: int,
+    *,
+    max_iters: int = 8,
+    tol: float = 1e-4,
+    impl: str = "xla",
+) -> KMeansResult:
+    """Iterate to convergence (max center movement < tol) or max_iters."""
+
+    def cond(state):
+        centers, prev, it = state
+        moved = jnp.max(jnp.sum((centers - prev) ** 2, axis=1))
+        return jnp.logical_and(it < max_iters, moved > tol * tol)
+
+    def body(state):
+        centers, _, it = state
+        new_centers, _, _, _, _ = kmeans_step(x, centers, k, impl=impl)
+        return new_centers, centers, it + 1
+
+    far = init_centers + 10.0  # force first iteration
+    centers, _, iters = jax.lax.while_loop(
+        cond, body, (init_centers, far, jnp.int32(0))
+    )
+    idx, best_sim = ops.assign_argmax(x, centers, impl=impl)
+    return KMeansResult(
+        centers=centers,
+        assignment=idx,
+        best_sim=best_sim,
+        rss=metrics.rss(x, idx, k),
+        objective=metrics.cosine_objective(best_sim),
+        iterations=iters,
+    )
+
+
+def kmeans(
+    x: jax.Array,
+    k: int,
+    key: jax.Array,
+    *,
+    max_iters: int = 8,
+    tol: float = 1e-4,
+    init_centers: jax.Array | None = None,
+    impl: str = "xla",
+) -> KMeansResult:
+    """Convenience entry point with the paper's random-document init."""
+    if init_centers is None:
+        init_centers = init_random_centers(key, x, k)
+    return kmeans_fit(
+        x, init_centers, k, max_iters=max_iters, tol=tol, impl=impl
+    )

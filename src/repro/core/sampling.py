@@ -1,0 +1,36 @@
+"""Sampling utilities (paper: mappers assign random keys; one reducer extracts).
+
+Single-device: ``jax.random.choice`` without replacement.
+Distributed (see distrib/engine.py usage): each shard draws iid uniforms per doc,
+takes its local top-s, and a global top-s over the gathered candidates yields an
+exact uniform sample without replacement (global top-s is a subset of the union
+of local top-s sets).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("n", "s"))
+def sample_indices(key: jax.Array, n: int, s: int) -> jax.Array:
+    """s distinct indices uniform over [0, n)."""
+    return jax.random.choice(key, n, shape=(s,), replace=False)
+
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def local_top_s(key: jax.Array, n_local: int, s: int) -> tuple[jax.Array, jax.Array]:
+    """Per-shard step of distributed sampling: (scores, local indices) of top-s."""
+    u = jax.random.uniform(key, (n_local,))
+    scores, idx = jax.lax.top_k(u, min(s, n_local))
+    return scores, idx.astype(jnp.int32)
+
+
+def buckshot_sample_size(n: int, k: int) -> int:
+    """Paper's sample size s = sqrt(k * n)."""
+    import math
+
+    return max(k, int(math.ceil(math.sqrt(float(k) * float(n)))))

@@ -1,0 +1,1 @@
+"""Distributed runtime: MapReduce-on-JAX engine, sharding helpers, collectives."""

@@ -1,0 +1,325 @@
+"""Distributed K-Means / BKC / Buckshot: the paper's MapReduce jobs on a mesh.
+
+Data layout: document matrix rows sharded over the data axes
+(``P(("pod","data"), None)`` on the production mesh); centers and micro-cluster
+statistics replicated. Padding rows carry weight 0 and never contribute.
+
+Job structure mirrors the paper exactly:
+  K-Means   : one job per iteration (map=assign, combine=partial stats,
+              reduce=psum) — PKMeans [26].
+  BKC       : job 1 = micro-cluster build (psum/pmin of CF stats);
+              job 2 = joinToGroups on replicated (BigK)-sized stats
+              (the paper's single reducer);
+              job 3 = final assignment (sharded labels + RSS stats).
+  Buckshot  : job 0a = distributed uniform sample (local top-s + gathered
+              global top-s); job 0b = sample row collection (psum of
+              one-owner buffers); phase 1 HAC on replicated sample;
+              phase 2 = 2-3 K-Means jobs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.common import l2_normalize
+from repro.core.bkc import join_to_groups
+from repro.core.hac import single_link_labels
+from repro.core.microcluster import MicroClusters
+from repro.distrib.engine import make_job
+from repro.distrib.sharding import mesh_axis_size
+from repro.kernels import ops
+
+BIG = jnp.float32(jnp.finfo(jnp.float32).max)
+
+
+class DistClusterResult(NamedTuple):
+    centers: jax.Array  # (k, d) replicated
+    assignment: jax.Array  # (n,) sharded like the input rows
+    rss: jax.Array  # scalar (replicated)
+    objective: jax.Array  # scalar cosine objective
+    iterations: int
+
+
+# ----------------------------------------------------------------- common jobs
+
+
+def _assign_stats_map(
+    k: int, impl: str, *, prezeroed: bool = False, unit_norm: bool = False
+):
+    """map+combine for one K-Means iteration (also BKC job 3).
+
+    prezeroed=True asserts padding rows of x are already zero (the pipeline
+    zeroes them): the n x d ``x * w`` temporary is skipped entirely — zero
+    rows contribute nothing to sums/sq, and counts/obj still honor w.
+    (§Perf H3 change 1: removes a full read+write of the document shard.)
+
+    unit_norm=True asserts real rows are L2-normalized (tf-idf pipeline
+    guarantees it): sum of squared norms is exactly sum(w), removing another
+    full pass over the shard. (§Perf H3 change 3.)
+    """
+
+    def map_combine(data, bcast):
+        x, w = data["x"], data["w"]
+        centers = bcast["centers"]
+        idx, sim = ops.assign_argmax(x, centers, impl=impl)
+        xw = x if prezeroed else x * w[:, None]
+        sums, _ = ops.cluster_stats(xw, idx, k, impl=impl)
+        counts = jax.ops.segment_sum(w, idx, num_segments=k)
+        if unit_norm:
+            sq = jnp.sum(w)  # |x_i|^2 == 1 for real rows, 0 for padding
+        else:
+            sq = jnp.sum(jnp.sum(x.astype(jnp.float32) ** 2, axis=1) * w)
+        obj = jnp.sum(w * (1.0 - sim))
+        return {
+            "sums": sums,
+            "counts": counts,
+            "sq": sq,
+            "obj": obj,
+            "idx": idx,
+            "sim": sim,
+        }
+
+    kinds = {
+        "sums": "sum",
+        "counts": "sum",
+        "sq": "sum",
+        "obj": "sum",
+        "idx": "shard",
+        "sim": "shard",
+    }
+    return map_combine, kinds
+
+
+def _new_centers(sums, counts, old):
+    means = sums / jnp.maximum(counts, 1.0)[:, None]
+    return jnp.where(counts[:, None] > 0, l2_normalize(means), old)
+
+
+def _rss(sums, counts, sq):
+    means = sums / jnp.maximum(counts, 1.0)[:, None]
+    return sq - jnp.sum(counts * jnp.sum(means * means, axis=1))
+
+
+# ----------------------------------------------------------------- K-Means
+
+
+def kmeans_distributed(
+    mesh: Mesh,
+    axes: tuple[str, ...],
+    x: jax.Array,
+    w: jax.Array,
+    init_centers: jax.Array,
+    k: int,
+    *,
+    max_iters: int = 8,
+    tol: float = 1e-4,
+    impl: str = "xla",
+) -> DistClusterResult:
+    """PKMeans: the host drives iterations (the paper's job-chaining driver);
+    each iteration is ONE MapReduce job on the mesh."""
+    map_combine, kinds = _assign_stats_map(k, impl)
+    job = make_job(mesh, axes, map_combine, kinds, name="kmeans_iter")
+
+    centers = init_centers
+    out = None
+    it = 0
+    for it in range(1, max_iters + 1):
+        out = job({"x": x, "w": w}, {"centers": centers})
+        new_centers = _new_centers(out["sums"], out["counts"], centers)
+        moved = float(jnp.max(jnp.sum((new_centers - centers) ** 2, axis=1)))
+        centers = new_centers
+        if moved <= tol * tol:
+            break
+    # final assignment against the converged centers
+    out = job({"x": x, "w": w}, {"centers": centers})
+    return DistClusterResult(
+        centers=centers,
+        assignment=out["idx"],
+        rss=_rss(out["sums"], out["counts"], out["sq"]),
+        objective=out["obj"],
+        iterations=it,
+    )
+
+
+# ----------------------------------------------------------------- BKC
+
+
+def bkc_distributed(
+    mesh: Mesh,
+    axes: tuple[str, ...],
+    x: jax.Array,
+    w: jax.Array,
+    init_centers: jax.Array,
+    big_k: int,
+    k: int,
+    *,
+    impl: str = "xla",
+) -> DistClusterResult:
+    """BKC-for-documents as the paper's three MapReduce jobs."""
+
+    # ---- job 1: micro-cluster statistics (map: assign; combine: CF partials;
+    # reduce: psum / pmin)
+    def mc_map(data, bcast):
+        xs, ws = data["x"], data["w"]
+        centers = bcast["centers"]
+        idx, sim = ops.assign_argmax(xs, centers, impl=impl)
+        xw = xs * ws[:, None]
+        cf1, _ = ops.cluster_stats(xw, idx, big_k, impl=impl)
+        n = jax.ops.segment_sum(ws, idx, num_segments=big_k)
+        cf2 = jax.ops.segment_sum(
+            ws * jnp.sum(xs.astype(jnp.float32) ** 2, axis=1), idx, num_segments=big_k
+        )
+        sim_masked = jnp.where(ws > 0, sim, BIG)
+        min_sim = jax.ops.segment_min(sim_masked, idx, num_segments=big_k)
+        return {"n": n, "cf1": cf1, "cf2": cf2, "min_sim": min_sim}
+
+    job1 = make_job(
+        mesh,
+        axes,
+        mc_map,
+        {"n": "sum", "cf1": "sum", "cf2": "sum", "min_sim": "min"},
+        name="bkc_microclusters",
+    )
+    stats = job1({"x": x, "w": w}, {"centers": init_centers})
+
+    valid = stats["n"] > 0
+    mc = MicroClusters(
+        n=stats["n"],
+        cf1=stats["cf1"],
+        cf2=stats["cf2"],
+        centers=init_centers,
+        min_sim=jnp.where(valid, stats["min_sim"], 1.0),
+        valid=valid,
+    )
+
+    # ---- job 2: joinToGroups on the replicated (BigK)-sized state. The paper
+    # uses a single reducer; here every device runs the same tiny computation.
+    group, _thr = join_to_groups(mc, k)
+    sums = jax.ops.segment_sum(mc.cf1, group, num_segments=k)
+    counts = jax.ops.segment_sum(mc.n, group, num_segments=k)
+    centers = jnp.where(counts[:, None] > 0, l2_normalize(sums), 0.0)
+
+    # ---- job 3: final assignment pass
+    map_combine, kinds = _assign_stats_map(k, impl)
+    job3 = make_job(mesh, axes, map_combine, kinds, name="bkc_final_assign")
+    out = job3({"x": x, "w": w}, {"centers": centers})
+    return DistClusterResult(
+        centers=centers,
+        assignment=out["idx"],
+        rss=_rss(out["sums"], out["counts"], out["sq"]),
+        objective=out["obj"],
+        iterations=2,  # two full passes over the data
+    )
+
+
+# ----------------------------------------------------------------- Buckshot
+
+
+def sample_rows_distributed(
+    mesh: Mesh,
+    axes: tuple[str, ...],
+    x: jax.Array,
+    w: jax.Array,
+    s: int,
+    key: jax.Array,
+) -> jax.Array:
+    """Uniform sample (without replacement) of s real rows -> (s, d) replicated.
+
+    Exactness: global top-s of iid uniform scores is a uniform s-subset, and it
+    is contained in the union of per-shard top-s sets; each winner row is owned
+    by exactly one shard, so the psum of per-shard scatter buffers reconstructs
+    the sample." """
+    n_shards = mesh_axis_size(mesh, axes)
+    n_local = x.shape[0] // n_shards
+
+    def sample_map(data, bcast):
+        ws = data["w"]
+        me = jax.lax.axis_index(axes)
+        sub = jax.random.fold_in(bcast["key"], me)
+        u = jax.random.uniform(sub, ws.shape) * jnp.where(ws > 0, 1.0, 0.0)
+        top = min(s, n_local)
+        scores, li = jax.lax.top_k(u, top)
+        gi = li.astype(jnp.int32) + me.astype(jnp.int32) * n_local
+        return {"scores": scores, "gidx": gi}
+
+    job_a = make_job(
+        mesh, axes, sample_map, {"scores": "gather", "gidx": "gather"}, name="sample_topk"
+    )
+    cand = job_a({"x": x, "w": w}, {"key": key})
+    top_scores, pos = jax.lax.top_k(cand["scores"], s)
+    del top_scores
+    sample_gidx = cand["gidx"][pos]  # (s,) replicated
+
+    def collect_map(data, bcast):
+        xs = data["x"]
+        me = jax.lax.axis_index(axes)
+        gidx = bcast["gidx"]
+        owner = gidx // n_local
+        local = jnp.where(owner == me, gidx % n_local, 0)
+        rows = xs[local]
+        rows = jnp.where((owner == me)[:, None], rows, 0.0)
+        return {"rows": rows}
+
+    job_b = make_job(mesh, axes, collect_map, {"rows": "sum"}, name="sample_collect")
+    out = job_b({"x": x, "w": w}, {"gidx": sample_gidx})
+    return out["rows"]
+
+
+def buckshot_distributed(
+    mesh: Mesh,
+    axes: tuple[str, ...],
+    x: jax.Array,
+    w: jax.Array,
+    k: int,
+    key: jax.Array,
+    *,
+    sample_size: int,
+    kmeans_iters: int = 3,
+    impl: str = "xla",
+    hac: str = "replicated",
+) -> DistClusterResult:
+    """Buckshot: distributed sample -> single-link HAC -> 2-3 distributed
+    K-Means iterations.
+
+    hac = "replicated": phase 1 runs replicated on every device — the sample
+      is s = sqrt(kn), tiny next to the collection, and replicating it avoids
+      a scatter/gather round-trip.
+    hac = "boruvka": phase 1's per-row edge search is sharded over the mesh
+      (distrib/hac_parallel.py) — the paper's PARABLE partition+align, with an
+      O(log s) round guarantee. Same labels, bit-for-bit."""
+    xs = sample_rows_distributed(mesh, axes, x, w, sample_size, key)
+    xs = l2_normalize(xs)
+
+    if hac == "boruvka":
+        from repro.distrib.hac_parallel import single_link_labels_distributed
+
+        labels = single_link_labels_distributed(mesh, axes, xs, k, impl=impl)
+        sums, counts = ops.cluster_stats(xs, labels, k, impl="xla")
+        init_centers = jnp.where(counts[:, None] > 0, l2_normalize(sums), 0.0)
+    else:
+
+        @jax.jit
+        def phase1(xs):
+            sim = xs @ xs.T
+            labels = single_link_labels(sim, k)
+            sums, counts = ops.cluster_stats(xs, labels, k, impl="xla")
+            return jnp.where(counts[:, None] > 0, l2_normalize(sums), 0.0)
+
+        init_centers = phase1(xs)
+    res = kmeans_distributed(
+        mesh,
+        axes,
+        x,
+        w,
+        init_centers,
+        k,
+        max_iters=kmeans_iters,
+        tol=0.0,
+        impl=impl,
+    )
+    return res

@@ -1,0 +1,80 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+At 1000+ nodes the DP all-reduce payload dominates the interconnect budget;
+int8 cuts it 4x vs f32 (2x vs bf16). Error feedback (Seide et al.) carries the
+quantization residual into the next step so convergence is preserved.
+
+`compressed_allreduce` is the explicit shard_map form (clustering engine /
+custom loops). `fake_compress` applies the same wire quantization inside an
+auto-SPMD train step — the arithmetic the gradients experience is identical to
+quantize -> psum -> dequantize with per-tensor scales, so the numerics of the
+1000-node path are exercised even when XLA issues the actual collective."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8. Returns (q, scale)."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def fake_compress(grads: Any) -> Any:
+    """Round-trip every gradient leaf through the int8 wire format."""
+
+    def f(g):
+        q, s = quantize(g)
+        return dequantize(q, s).astype(g.dtype)
+
+    return jax.tree_util.tree_map(f, grads)
+
+
+def init_error_feedback(grads_like: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like
+    )
+
+
+def compress_with_feedback(grads: Any, errors: Any) -> tuple[Any, Any]:
+    """(grads, residuals) -> (wire-format grads, new residuals)."""
+
+    def f(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize(corrected)
+        deq = dequantize(q, s)
+        return deq.astype(g.dtype), corrected - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(errors)
+    out = [f(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        jax.tree_util.tree_unflatten(treedef, [o[0] for o in out]),
+        jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]),
+    )
+
+
+def compressed_psum(g: jax.Array, axes: tuple[str, ...]) -> jax.Array:
+    """Explicit collective form (use inside shard_map): int8 on the wire,
+    int32 accumulate.
+
+    The scale must be SHARED before quantizing — summing int8 values that
+    were quantized with different per-shard scales and dequantizing with any
+    single scale is biased. The shared scale costs one scalar pmax (4 bytes)
+    before the int8 payload."""
+    g32 = g.astype(jnp.float32)
+    local_scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    scale = jax.lax.pmax(local_scale, axes)  # tiny pre-collective
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axes)
+    return total.astype(jnp.float32) * scale

@@ -1,0 +1,105 @@
+"""MapReduce-on-JAX: the paper's execution model as a shard_map combinator.
+
+A job is `map_combine` (runs per shard: the paper's map task + combiner) plus a
+per-output reduction kind (the shuffle+reduce):
+
+  'sum' / 'min' / 'max'  -> jax.lax.psum / pmin / pmax over the data axes
+                            (replicated result on every device)
+  'shard'                -> stays sharded like the input rows (e.g. per-doc
+                            assignment labels)
+
+The combiner discipline is what made PKMeans efficient on Hadoop and is what
+keeps the ICI traffic at O(k*d) here: map_combine must aggregate locally before
+the reduction kind crosses shards.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.distrib.sharding import data_spec
+
+_REDUCERS: dict[str, Callable[[jax.Array, Any], jax.Array]] = {
+    "sum": jax.lax.psum,
+    "min": jax.lax.pmin,
+    "max": jax.lax.pmax,
+    # 'gather': concatenate per-shard results (replicated) — used when the
+    # reducer needs all candidates (e.g. distributed top-s sampling).
+    "gather": lambda v, axes: jax.lax.all_gather(v, axes, tiled=True),
+}
+
+
+def make_job(
+    mesh: Mesh,
+    axes: tuple[str, ...],
+    map_combine: Callable,
+    reduce_kinds: Any,
+    *,
+    name: str = "job",
+) -> Callable:
+    """Build a jitted MapReduce job.
+
+    Args:
+      mesh: device mesh.
+      axes: mesh axis name(s) the data rows are sharded over.
+      map_combine: (data_shard_pytree, bcast_pytree) -> out_pytree. Runs on each
+        shard; must do its own local aggregation (the combiner).
+      reduce_kinds: pytree matching out_pytree with
+        'sum'|'min'|'max'|'gather'|'shard' string leaves.
+      name: debugging label.
+
+    Returns:
+      jitted fn (data_pytree, bcast_pytree) -> out_pytree. Data arrays are
+      sharded on dim 0; bcast arrays are replicated.
+    """
+
+    def inner(data, bcast):
+        out = map_combine(data, bcast)
+        flat_out, treedef = jax.tree_util.tree_flatten(out)
+        flat_kinds = treedef.flatten_up_to(reduce_kinds)
+        reduced = [
+            v if kind == "shard" else _REDUCERS[kind](v, axes)
+            for v, kind in zip(flat_out, flat_kinds)
+        ]
+        return jax.tree_util.tree_unflatten(treedef, reduced)
+
+    # PartitionSpec need not enumerate trailing dims: P(axes) shards dim 0 and
+    # replicates the rest, so specs derive purely from pytree structure.
+    out_specs = jax.tree_util.tree_map(
+        lambda kind: P(axes) if kind == "shard" else P(), reduce_kinds
+    )
+
+    @jax.jit
+    def run(data, bcast):
+        in_specs = (
+            jax.tree_util.tree_map(lambda _: P(axes), data),
+            jax.tree_util.tree_map(lambda _: P(), bcast),
+        )
+        # check_vma=False: the 'gather' reducer (all_gather tiled) produces
+        # replicated values that the static VMA inference cannot prove.
+        f = jax.shard_map(
+            inner, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+        return f(data, bcast)
+
+    run.__name__ = f"mr_job_{name}"
+    return run
+
+
+def run_job(
+    mesh: Mesh,
+    axes: tuple[str, ...],
+    map_combine: Callable,
+    reduce_kinds: Any,
+    data: Any,
+    bcast: Any = (),
+    *,
+    name: str = "job",
+) -> Any:
+    """One-shot convenience wrapper around make_job."""
+    return make_job(mesh, axes, map_combine, reduce_kinds, name=name)(data, bcast)

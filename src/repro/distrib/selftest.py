@@ -1,0 +1,108 @@
+"""SPMD equivalence self-test — run as ``python -m repro.distrib.selftest``.
+
+Spawns with 8 simulated host devices and checks that the distributed
+K-Means / BKC / Buckshot match their single-device references bit-for-bit
+(same inits), including with padded (weight-0) rows. Used by
+tests/test_distributed.py via subprocess so the main pytest process keeps a
+single device.
+"""
+
+import os
+
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np  # noqa: E402
+
+
+def main() -> int:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.common import l2_normalize
+    from repro.core import bkc_fit, buckshot_fit, kmeans_fit, metrics
+    from repro.distrib import cluster as dc
+    from repro.distrib.sharding import make_flat_mesh, pad_rows_to_multiple, shard_rows
+
+    assert len(jax.devices()) == 8, f"expected 8 devices, got {len(jax.devices())}"
+    mesh = make_flat_mesh(8)
+    axes = ("data",)
+
+    rng = np.random.default_rng(0)
+    k, n, d = 10, 1999, 96  # deliberately NOT divisible by 8 -> padding path
+    blobs = rng.normal(size=(k, d))
+    lab = rng.integers(0, k, size=n)
+    x_np = (blobs[lab] + 0.4 * rng.normal(size=(n, d))).astype(np.float32)
+    x1 = l2_normalize(jnp.asarray(x_np))
+
+    xp, w = pad_rows_to_multiple(x1, 8)
+    xp = shard_rows(mesh, axes, xp)
+    w = shard_rows(mesh, axes, w)
+
+    key = jax.random.PRNGKey(7)
+    failures = []
+
+    # ---- K-Means: distributed == single-device given identical init
+    init = l2_normalize(x1[jax.random.choice(key, n, (k,), replace=False)])
+    ref = kmeans_fit(x1, init, k, max_iters=6, tol=1e-4)
+    got = dc.kmeans_distributed(mesh, axes, xp, w, init, k, max_iters=6, tol=1e-4)
+    if not np.allclose(float(ref.rss), float(got.rss), rtol=2e-4):
+        failures.append(f"kmeans rss mismatch: {float(ref.rss)} vs {float(got.rss)}")
+    ref_idx = np.asarray(ref.assignment)
+    got_idx = np.asarray(got.assignment)[: n]
+    if (ref_idx != got_idx).mean() > 0.001:
+        failures.append("kmeans assignment mismatch > 0.1%")
+
+    # ---- BKC: three-job pipeline == single-device bkc_fit
+    big_k = 64
+    ckey = jax.random.fold_in(key, 1)
+    cinit = l2_normalize(x1[jax.random.choice(ckey, n, (big_k,), replace=False)])
+    ref_b = bkc_fit(x1, cinit, big_k, k)
+    got_b = dc.bkc_distributed(mesh, axes, xp, w, cinit, big_k, k)
+    if not np.allclose(float(ref_b.rss), float(got_b.rss), rtol=2e-4):
+        failures.append(f"bkc rss mismatch: {float(ref_b.rss)} vs {float(got_b.rss)}")
+
+    # ---- Buckshot: distributed sample is a valid uniform subset and the
+    # pipeline matches the single-device run seeded with the same sample.
+    s = 160
+    skey = jax.random.fold_in(key, 2)
+    xs = dc.sample_rows_distributed(mesh, axes, xp, w, s, skey)
+    xs_np = np.asarray(xs)
+    # every sampled row must be a real (non-padding) input row
+    norms = np.linalg.norm(xs_np, axis=1)
+    if not (norms > 0.5).all():
+        failures.append("sample contains padding rows")
+    # rows must come from the dataset
+    matches = (np.abs(xs_np[:, None, :8] - np.asarray(x1)[None, :, :8]).sum(-1) < 1e-5).any(1)
+    if not matches.all():
+        failures.append("sampled rows not found in dataset")
+    got_bs = dc.buckshot_distributed(
+        mesh, axes, xp, w, k, skey, sample_size=s, kmeans_iters=3
+    )
+    # and with identical sample rows, the single-device pipeline must agree:
+    # reconstruct sample indices by matching rows
+    d_match = np.argmin(
+        ((xs_np[:, None, :] - np.asarray(x1)[None, :, :]) ** 2).sum(-1), axis=1
+    )
+    ref_bs = buckshot_fit(x1, jnp.asarray(d_match), k, kmeans_iters=3)
+    if not np.allclose(float(ref_bs.kmeans.rss), float(got_bs.rss), rtol=2e-4):
+        failures.append(
+            f"buckshot rss mismatch: {float(ref_bs.kmeans.rss)} vs {float(got_bs.rss)}"
+        )
+
+    # ---- quality sanity on labels
+    pur = float(metrics.purity(got.assignment[:n], jnp.asarray(lab), k, k))
+    if pur < 0.5:
+        failures.append(f"kmeans purity suspiciously low: {pur}")
+
+    if failures:
+        print("SELFTEST FAIL")
+        for f in failures:
+            print(" -", f)
+        return 1
+    print("SELFTEST OK: kmeans/bkc/buckshot distributed == reference (8 shards)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,63 @@
+"""Sharding helpers shared by the clustering engine and the model runtime."""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    """jax.make_mesh with explicit Auto axis types (silences 0.9 deprecation)."""
+    return jax.make_mesh(
+        tuple(shape),
+        tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_flat_mesh(n_devices: int | None = None, axis: str = "data") -> Mesh:
+    """1-D mesh over all (or first n) local devices — the clustering layout."""
+    devs = jax.devices()[: n_devices or len(jax.devices())]
+    return Mesh(np.array(devs), (axis,))
+
+
+def data_spec(axes: tuple[str, ...], ndim: int) -> P:
+    """Shard dim 0 over (possibly multiple) mesh axes, replicate the rest."""
+    return P(axes, *(None,) * (ndim - 1))
+
+
+def replicated(ndim: int) -> P:
+    del ndim
+    return P()
+
+
+def shard_rows(mesh: Mesh, axes: tuple[str, ...], x: jax.Array) -> jax.Array:
+    """Place an array with rows sharded over `axes` (host -> devices)."""
+    return jax.device_put(x, NamedSharding(mesh, data_spec(axes, x.ndim)))
+
+
+def mesh_axis_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    return int(math.prod(mesh.shape[a] for a in axes))
+
+
+def pad_rows_to_multiple(
+    x: np.ndarray | jax.Array, multiple: int
+) -> tuple[Any, Any]:
+    """Pad rows to a multiple of the shard count; returns (padded, weights).
+
+    Weights are 1.0 for real rows and 0.0 for padding — every distributed job
+    threads them so padding never contributes to statistics.
+    """
+    n = x.shape[0]
+    pad = (-n) % multiple
+    w = jnp.ones((n,), jnp.float32)
+    if pad:
+        x = jnp.concatenate([jnp.asarray(x), jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+        w = jnp.concatenate([w, jnp.zeros((pad,), jnp.float32)])
+    return jnp.asarray(x), w

@@ -1,0 +1,111 @@
+"""Best-cross-component-edge Pallas TPU kernel — the Borůvka/single-link step.
+
+For every row point, find the most similar column point that belongs to a
+DIFFERENT component (the paper's PARABLE 'merge two dendrograms' primitive,
+recast as an MST edge search). The mask (labels_row != labels_col), the row
+max and the argmax are fused into one VMEM pass over (BR, BC) similarity
+tiles, so the masked similarity matrix never exists in HBM.
+
+Grid: (r_tiles, c_tiles), c innermost; the (BR, 1) running best stays resident
+in the revisited output block across the column sweep.
+
+Semantics identical to ref.best_edge: ties take the lowest column index
+(strict > across tiles, first-argmax within a tile); rows with no
+cross-component column get (-1, f32.min).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = float(jnp.finfo(jnp.float32).min)
+
+BR = 256
+BC = 256
+
+
+def _kernel(sim_ref, lr_ref, lc_ref, j_ref, s_ref, *, c_real: int, bc: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        j_ref[...] = jnp.full_like(j_ref, -1)
+        s_ref[...] = jnp.full_like(s_ref, NEG)
+
+    sim = sim_ref[...].astype(jnp.float32)  # (BR, BC)
+    lr = lr_ref[...]  # (BR, 1) int32
+    lc = lc_ref[...]  # (1, BC) int32
+
+    col = j * bc + jax.lax.broadcasted_iota(jnp.int32, sim.shape, 1)
+    keep = jnp.logical_and(lr != lc, col < c_real)  # cross-component & unpadded
+    masked = jnp.where(keep, sim, NEG)
+
+    local_s = jnp.max(masked, axis=1, keepdims=True)
+    local_j = jnp.argmax(masked, axis=1).astype(jnp.int32)[:, None] + j * bc
+
+    best_s = s_ref[...]
+    better = local_s > best_s
+    s_ref[...] = jnp.where(better, local_s, best_s)
+    j_ref[...] = jnp.where(better, local_j, j_ref[...])
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "br", "bc"))
+def best_edge_pallas(
+    sim: jax.Array,
+    labels_row: jax.Array,
+    labels_col: jax.Array,
+    *,
+    interpret: bool = False,
+    br: int = BR,
+    bc: int = BC,
+) -> tuple[jax.Array, jax.Array]:
+    """(r, c) sim, (r,) row labels, (c,) col labels -> ((r,) best col, (r,) sim).
+
+    best col == -1 (and sim == f32.min) when the row has no cross-component
+    candidate.
+    """
+    r, c = sim.shape
+    br = min(br, max(8, r))
+    bc = min(bc, max(8, c))
+
+    sp = _pad_to(_pad_to(sim, 0, br), 1, bc)
+    lr = _pad_to(labels_row.astype(jnp.int32)[:, None], 0, br)
+    # pad cols with label -2: never equals a real label, but masked by c_real anyway
+    lc = _pad_to(labels_col.astype(jnp.int32)[None, :], 1, bc)
+    rp, cp = sp.shape
+    grid = (rp // br, cp // bc)
+
+    best_j, best_s = pl.pallas_call(
+        functools.partial(_kernel, c_real=c, bc=bc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bc), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((rp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(sp, lr, lc)
+    out_j = best_j[:r, 0]
+    out_s = best_s[:r, 0]
+    return jnp.where(out_s == NEG, -1, out_j), out_s

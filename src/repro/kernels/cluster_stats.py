@@ -1,0 +1,113 @@
+"""Cluster-statistics Pallas TPU kernel — the paper's combiner step.
+
+Scatter-add of n document rows into k cluster bins, recast as a one-hot
+matmul so it runs on the MXU in a single pass: for each (d-tile, n-tile) grid
+step the kernel builds the (k, BN) one-hot membership tile IN VMEM (two iota
+compares — it never exists in HBM) and accumulates
+
+    sums[k, BD] += one_hot(k, BN) @ x(BN, BD)
+
+into the revisited output block. Counts fall out of the same one-hot via a
+(k, BN) @ (BN, 1) matvec on the d == 0 plane.
+
+Grid: (d_tiles, n_tiles), n innermost, so each (k, BD) accumulator stays
+VMEM-resident for a full sweep over the documents. k is padded to the lane
+width by the wrapper; padded-out rows are masked inside the kernel (so row
+padding never pollutes bin 0).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN = 256  # doc rows per tile
+BD = 512  # feature columns per tile
+
+
+def _kernel(idx_ref, x_ref, sums_ref, counts_ref, *, n_real: int, bn: int):
+    i = pl.program_id(0)  # d tile
+    j = pl.program_id(1)  # n tile
+
+    @pl.when(j == 0)
+    def _init_sums():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _init_counts():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    idx = idx_ref[...]  # (BN, 1) int32
+    x = x_ref[...]  # (BN, BD)
+    kp = sums_ref.shape[0]
+
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (kp, idx.shape[0]), 1)
+    valid = (j * bn + row_ids) < n_real  # mask padded doc rows
+    bins = jax.lax.broadcasted_iota(jnp.int32, (kp, idx.shape[0]), 0)
+    one_hot = jnp.where(
+        jnp.logical_and(bins == idx[:, 0][None, :], valid), 1.0, 0.0
+    ).astype(jnp.float32)
+
+    sums_ref[...] += jax.lax.dot_general(
+        one_hot,
+        x.astype(jnp.float32),
+        (((1,), (0,)), ((), ())),  # (kp, BN) @ (BN, BD)
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(i == 0)
+    def _counts():
+        counts_ref[...] += jnp.sum(one_hot, axis=1, keepdims=True)
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret", "bn", "bd"))
+def cluster_stats_pallas(
+    x: jax.Array,
+    idx: jax.Array,
+    k: int,
+    *,
+    interpret: bool = False,
+    bn: int = BN,
+    bd: int = BD,
+) -> tuple[jax.Array, jax.Array]:
+    """(n, d), (n,) int32 -> ((k, d) f32 sums, (k,) f32 counts)."""
+    n, d = x.shape
+    bn = min(bn, max(8, n))
+    bd = min(bd, max(8, d))
+
+    xp = _pad_to(_pad_to(x, 0, bn), 1, bd)
+    idxp = _pad_to(idx.astype(jnp.int32)[:, None], 0, bn)
+    np_, dp = xp.shape
+    kp = k + ((-k) % 8)  # sublane-align the bin dimension
+    grid = (dp // bd, np_ // bn)
+
+    sums, counts = pl.pallas_call(
+        functools.partial(_kernel, n_real=n, bn=bn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, bd), lambda i, j: (j, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((kp, bd), lambda i, j: (0, i)),
+            pl.BlockSpec((kp, 1), lambda i, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((kp, dp), jnp.float32),
+            jax.ShapeDtypeStruct((kp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idxp, xp)
+    return sums[:k, :d], counts[:k, 0]

@@ -1,0 +1,144 @@
+"""Flash-decode Pallas TPU kernel — one-token GQA attention vs a long KV cache.
+
+Online softmax over KV tiles: for each kv head the (g, dh) query group sweeps
+the (BS, dh) key/value tiles, carrying running (max, sum, weighted-value)
+statistics in VMEM scratch. The (g, S) logit row never exists in HBM — this is
+the memory-bound half of serving, so HBM traffic is exactly one read of K and
+V (and only up to `length`: tiles past the valid prefix are skipped entirely
+via pl.when, making decode cost proportional to the ACTUAL context, not the
+cache capacity).
+
+Grid: (hk, s_tiles), s innermost; scratch persists across the s sweep of one
+head and is re-initialized when the next head starts. `length` arrives as a
+scalar-prefetch operand (SMEM) so the skip test is available before the tile's
+DMA is issued.
+
+Layout: wrapper reshapes q (h, dh) -> (hk, g, dh) and k/v (s, hk, dh) ->
+(hk, s, dh) so the head dim is the (parallel) leading grid axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+BS = 512  # kv positions per tile
+
+
+def _kernel(
+    len_ref,  # scalar prefetch: (1,) int32 valid prefix length
+    q_ref,  # (1, g, dh)
+    k_ref,  # (1, BS, dh)
+    v_ref,  # (1, BS, dh)
+    o_ref,  # (1, g, dh)
+    m_sc,  # (g, 1) f32 running max
+    l_sc,  # (g, 1) f32 running denominator
+    acc_sc,  # (g, dh) f32 running numerator
+    *,
+    bs: int,
+    scale: float,
+):
+    j = pl.program_id(1)
+    n_s = pl.num_programs(1)
+    length = len_ref[0]
+
+    @pl.when(j == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    @pl.when(j * bs < length)  # skip tiles entirely past the valid prefix
+    def _tile():
+        q = q_ref[0].astype(jnp.float32)  # (g, dh)
+        k = k_ref[0].astype(jnp.float32)  # (BS, dh)
+        v = v_ref[0].astype(jnp.float32)  # (BS, dh)
+
+        logits = (
+            jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+            )
+            * scale
+        )  # (g, BS)
+        kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        logits = jnp.where(kpos < length, logits, NEG)
+
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1, keepdims=True))
+        p = jnp.exp(logits - m_new)  # (g, BS)
+        corr = jnp.exp(m_prev - m_new)  # (g, 1)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_sc[...] = m_new
+
+    @pl.when(j == n_s - 1)
+    def _finalize():
+        out = acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)
+        o_ref[...] = out[None].astype(o_ref.dtype)
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bs"))
+def flash_decode_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    length: jax.Array | int,
+    *,
+    interpret: bool = False,
+    bs: int = BS,
+) -> jax.Array:
+    """q (h, dh), k/v (s, hk, dh), valid prefix `length` -> (h, dh).
+
+    GQA: query head i attends through kv head i // (h // hk), matching
+    ref.flash_decode.
+    """
+    s, hk, dh = k.shape
+    h = q.shape[0]
+    g = h // hk
+    bs = min(bs, max(8, s))
+
+    qg = q.reshape(hk, g, dh)
+    kt = _pad_to(jnp.moveaxis(k, 1, 0), 1, bs)  # (hk, s_pad, dh)
+    vt = _pad_to(jnp.moveaxis(v, 1, 0), 1, bs)
+    sp = kt.shape[1]
+    grid = (hk, sp // bs)
+    length = jnp.asarray(length, jnp.int32).reshape((1,))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bs=bs, scale=1.0 / float(dh) ** 0.5),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, g, dh), lambda i, j, *_: (i, 0, 0)),
+                pl.BlockSpec((1, bs, dh), lambda i, j, *_: (i, j, 0)),
+                pl.BlockSpec((1, bs, dh), lambda i, j, *_: (i, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, g, dh), lambda i, j, *_: (i, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, dh), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((hk, g, dh), q.dtype),
+        interpret=interpret,
+    )(length, qg, kt, vt)
+    return out.reshape(h, dh)

@@ -1,0 +1,105 @@
+"""Jit'd public wrappers for the kernel layer, with implementation dispatch.
+
+``impl`` selects:
+  - "xla":              pure-jnp (ref.py) path, compiled by XLA. Default on CPU.
+  - "pallas":           Pallas TPU kernel (pl.pallas_call, Mosaic backend).
+  - "pallas_interpret": Pallas kernel body executed by the interpreter on CPU —
+                        used by tests to validate kernel logic without a TPU.
+  - "auto":             "pallas" on TPU, "xla" elsewhere.
+
+Core code imports ONLY from this module, never from the kernels directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _auto_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _resolve(impl: str) -> str:
+    return _auto_impl() if impl == "auto" else impl
+
+
+# ---------------------------------------------------------------- assign
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def assign_argmax(
+    x: jax.Array, centers: jax.Array, *, impl: str = "auto"
+) -> tuple[jax.Array, jax.Array]:
+    """(n,d),(k,d) -> ((n,) best center idx, (n,) best similarity)."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.assign_argmax(x, centers)
+    from repro.kernels import assign_argmax as kmod
+
+    return kmod.assign_argmax_pallas(x, centers, interpret=impl == "pallas_interpret")
+
+
+# ---------------------------------------------------------------- stats
+
+
+@functools.partial(jax.jit, static_argnames=("k", "impl"))
+def cluster_stats(
+    x: jax.Array, idx: jax.Array, k: int, *, impl: str = "auto"
+) -> tuple[jax.Array, jax.Array]:
+    """(n,d),(n,) -> ((k,d) sums, (k,) counts). MapReduce combiner."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.cluster_stats(x, idx, k)
+    from repro.kernels import cluster_stats as kmod
+
+    return kmod.cluster_stats_pallas(x, idx, k, interpret=impl == "pallas_interpret")
+
+
+# ---------------------------------------------------------------- best edge
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def best_edge(
+    sim: jax.Array,
+    labels_row: jax.Array,
+    labels_col: jax.Array,
+    *,
+    impl: str = "auto",
+) -> tuple[jax.Array, jax.Array]:
+    """Per-row best cross-component edge (single-link / Boruvka inner step)."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.best_edge(sim, labels_row, labels_col)
+    from repro.kernels import best_edge as kmod
+
+    return kmod.best_edge_pallas(
+        sim, labels_row, labels_col, interpret=impl == "pallas_interpret"
+    )
+
+
+# ---------------------------------------------------------------- flash decode
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def flash_decode(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    length: jax.Array,
+    *,
+    impl: str = "auto",
+) -> jax.Array:
+    """One-token GQA attention vs KV cache with online softmax over KV tiles."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.flash_decode(q, k, v, length)
+    from repro.kernels import flash_decode as kmod
+
+    return kmod.flash_decode_pallas(
+        q, k, v, length, interpret=impl == "pallas_interpret"
+    )

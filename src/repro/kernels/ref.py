@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function here is the semantic ground truth. Kernel implementations in
+``assign_argmax.py`` / ``cluster_stats.py`` / ``best_edge.py`` /
+``flash_decode.py`` are validated against these in interpret mode across
+shape/dtype sweeps (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def assign_argmax(x: jax.Array, centers: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Nearest-center assignment by dot-product similarity.
+
+    Args:
+      x: (n, d) document vectors (caller normalizes for cosine semantics).
+      centers: (k, d) center vectors.
+
+    Returns:
+      best_idx: (n,) int32 argmax_k <x, c_k>   (ties -> lowest index)
+      best_sim: (n,) f32    max_k <x, c_k>
+    """
+    sims = jnp.einsum(
+        "nd,kd->nk", x, centers, preferred_element_type=jnp.float32
+    )
+    best_idx = jnp.argmax(sims, axis=1).astype(jnp.int32)
+    best_sim = jnp.max(sims, axis=1).astype(jnp.float32)
+    return best_idx, best_sim
+
+
+def cluster_stats(
+    x: jax.Array, idx: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Combiner: per-cluster sums and counts (the MapReduce 'combine' step).
+
+    Args:
+      x: (n, d) document vectors.
+      idx: (n,) int32 cluster assignment in [0, k).
+      k: number of clusters.
+
+    Returns:
+      sums: (k, d) f32 per-cluster vector sums.
+      counts: (k,) f32 per-cluster document counts.
+    """
+    one_hot = jax.nn.one_hot(idx, k, dtype=jnp.float32)  # (n, k)
+    sums = jnp.einsum(
+        "nk,nd->kd", one_hot, x, preferred_element_type=jnp.float32
+    )
+    counts = jnp.sum(one_hot, axis=0)
+    return sums, counts
+
+
+def best_edge(
+    sim: jax.Array, labels_row: jax.Array, labels_col: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Single-link/Boruvka step: per-row best cross-component edge.
+
+    Args:
+      sim: (r, c) similarity block; rows are this shard's points.
+      labels_row: (r,) component label of each row point.
+      labels_col: (c,) component label of each column point.
+
+    Returns:
+      best_j: (r,) int32 column index of the most similar point in a DIFFERENT
+        component (ties -> lowest index; -1 if none).
+      best_s: (r,) f32 similarity of that edge (-inf if none).
+    """
+    neg = jnp.finfo(jnp.float32).min
+    cross = labels_row[:, None] != labels_col[None, :]
+    masked = jnp.where(cross, sim.astype(jnp.float32), neg)
+    best_j = jnp.argmax(masked, axis=1).astype(jnp.int32)
+    best_s = jnp.max(masked, axis=1)
+    best_j = jnp.where(best_s == neg, -1, best_j)
+    return best_j, best_s
+
+
+def flash_decode(
+    q: jax.Array, k: jax.Array, v: jax.Array, length: jax.Array | int
+) -> jax.Array:
+    """One-token attention against a (possibly padded) KV cache.
+
+    Args:
+      q: (h, dh) query for the new token (h query heads).
+      k: (s, hk, dh) key cache.
+      v: (s, hk, dh) value cache.
+      length: valid prefix length (positions >= length are masked).
+
+    Returns:
+      o: (h, dh) attention output. GQA: query head i reads kv head i // (h//hk).
+    """
+    s, hk, dh = k.shape
+    h = q.shape[0]
+    group = h // hk
+    kq = jnp.repeat(k, group, axis=1)  # (s, h, dh)
+    vq = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum(
+        "hd,shd->hs", q.astype(jnp.float32), kq.astype(jnp.float32)
+    ) / jnp.sqrt(jnp.float32(dh))
+    mask = jnp.arange(s)[None, :] < length
+    logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hs,shd->hd", w, vq.astype(jnp.float32)).astype(q.dtype)

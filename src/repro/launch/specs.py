@@ -1,0 +1,95 @@
+"""Abstract inputs (ShapeDtypeStruct + NamedSharding) for every dry-run cell.
+
+Nothing here allocates: params/opt-state come from Rec trees, caches from
+jax.eval_shape over init_cache, batches from registry.batch_specs.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import transformer
+from repro.models.common import MeshPolicy
+from repro.models.registry import batch_specs, get_model
+from repro.train import optimizer as opt_mod
+
+
+def _cache_syms(cfg: ModelConfig, batch: int) -> Any:
+    """Sym-spec tree structurally matching transformer.init_cache output."""
+    attn = {"k": ("dp", None, "tp", None), "v": ("dp", None, "tp", None)}
+    if batch < 8:  # long-context: sequence-sharded KV
+        attn = {"k": (None, "tp", None, None), "v": (None, "tp", None, None)}
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        return [attn for _ in range(cfg.n_layers)]
+    if fam == "hybrid":
+        out = []
+        for i in range(cfg.n_layers):
+            c: dict[str, Any] = {
+                "mamba": {
+                    "state": ("dp", "tp", None, None),
+                    "conv": ("dp", None, "tp"),
+                }
+            }
+            if cfg.attn_every and (i + 1) % cfg.attn_every == 0:
+                c["attn"] = attn
+            out.append(c)
+        return out
+    if fam == "rwkv":
+        one = {
+            "time": {
+                "shift": ("dp", None, "tp"),
+                "state": ("dp", None, None, None),
+            },
+            "chan": {"shift": ("dp", None, "tp")},
+        }
+        return [one for _ in range(cfg.n_layers)]
+    if fam == "encdec":
+        return {
+            "self": [attn for _ in range(cfg.n_layers)],
+            "enc_out": ("dp", None, None),
+        }
+    raise ValueError(fam)
+
+
+def abstract_cache(cfg: ModelConfig, cell: ShapeCell, policy: MeshPolicy):
+    """Decode-cell cache: capacity = cell.seq_len, no allocation."""
+    b, s = cell.global_batch, cell.seq_len
+    shapes = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, b, s, jnp.bfloat16)
+    )
+    syms = _cache_syms(cfg, b)
+    return jax.tree_util.tree_map(
+        lambda sds, sym: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=policy.sharding_for(sds.shape, sym)
+        ),
+        shapes,
+        syms,
+        is_leaf=lambda x: isinstance(x, (tuple, jax.ShapeDtypeStruct)),
+    )
+
+
+def cell_inputs(cfg: ModelConfig, cell: ShapeCell, policy: MeshPolicy) -> dict:
+    """All abstract inputs for one (arch x shape) dry-run cell."""
+    model = get_model(cfg)
+    params = model.abstract_params(policy, jnp.bfloat16)
+    out: dict[str, Any] = {"params": params}
+    if cell.kind == "train":
+        out["opt_state"] = opt_mod.abstract_opt_state(model._placed_recs(), policy)
+        out["batch"] = batch_specs(cfg, cell.global_batch, cell.seq_len, policy)
+    elif cell.kind == "prefill":
+        out["batch"] = batch_specs(cfg, cell.global_batch, cell.seq_len, policy)
+    else:  # decode
+        b = cell.global_batch
+        out["tokens"] = jax.ShapeDtypeStruct(
+            (b, 1), jnp.int32, sharding=policy.sharding_for((b, 1), ("dp", None))
+        )
+        out["caches"] = abstract_cache(cfg, cell, policy)
+        out["pos"] = jax.ShapeDtypeStruct(
+            (), jnp.int32, sharding=policy.sharding(())
+        )
+    return out

@@ -1,0 +1,7 @@
+"""LM model zoo: pure-function models over param pytrees (no flax).
+
+Every architecture is described by a tree of Rec (shape + symbolic partition
+spec + init rule). The same tree yields: materialized params (smoke tests,
+real training), ShapeDtypeStructs with NamedShardings (the multi-pod dry-run),
+and the optimizer-state sharding (ZeRO).
+"""

@@ -1,0 +1,215 @@
+"""Attention: RoPE, chunked (flash-style) training attention, cache decode.
+
+Training/prefill attention is a double scan over query/KV chunks with an
+online softmax — O(chunk^2) live memory instead of O(S^2), which is what makes
+the 32k-prefill cells compile inside a v5e HBM budget. The baseline computes
+every (q-chunk, kv-chunk) pair and masks; causal/window chunk skipping is a
+recorded §Perf hillclimb (it changes HLO FLOPs, not semantics).
+
+GQA layout convention: q (B,S,Hk,G,dh), kv (B,S,Hk,dh) — query head (k,g)
+reads kv head k. Window w > 0 means each position attends to the previous w
+positions (inclusive of itself); w == 0 means full causal (or full
+bidirectional when causal=False).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG = jnp.float32(-1e30)
+
+
+# ------------------------------------------------------------------ RoPE
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, dh), positions: (..., S)."""
+    if theta <= 0:
+        return x  # absolute-position archs (whisper)
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    # insert singleton axes for every head dim between S and dh
+    n_head_dims = x.ndim - positions.ndim - 1
+    ang = ang.reshape(ang.shape[:-1] + (1,) * n_head_dims + (half,))
+    cos = jnp.cos(ang)
+    sin = jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ masks
+
+
+def _chunk_mask(
+    qpos: jax.Array, kpos: jax.Array, window: jax.Array, causal: bool
+) -> jax.Array:
+    """(Cq, Ck) validity mask for one (q-chunk, kv-chunk) pair."""
+    d = qpos[:, None] - kpos[None, :]
+    ok = jnp.ones(d.shape, bool) if not causal else (d >= 0)
+    # window w: attend to positions (qpos-w, qpos]
+    ok = jnp.logical_and(ok, jnp.where(window > 0, d < window, True))
+    return ok
+
+
+# ------------------------------------------------------------------ flash
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "chunk"))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: jax.Array | int = 0,
+    causal: bool = True,
+    chunk: int = 1024,
+    q_offset: jax.Array | int = 0,
+) -> jax.Array:
+    """Chunked online-softmax attention.
+
+    q: (B, Sq, Hk, G, dh); k, v: (B, Sk, Hk, dh). Returns (B, Sq, Hk, G, dh).
+    q_offset: absolute position of q[0] relative to k[0] (cross/enc: 0).
+    """
+    b, sq, hk, g, dh = q.shape
+    sk = k.shape[1]
+    cq = min(chunk, sq)
+    ck = min(chunk, sk)
+    # pad sequences up to chunk multiples; padded KV positions are masked off
+    pq = (-sq) % cq
+    pk = (-sk) % ck
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = (sq + pq) // cq, (sk + pk) // ck
+
+    window = jnp.asarray(window, jnp.int32)
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+
+    qc = q.reshape(b, nq, cq, hk, g, dh)
+
+    def q_chunk_body(_, qi):
+        qi_q = jax.lax.dynamic_index_in_dim(qc, qi, axis=1, keepdims=False)
+        qpos = q_offset + qi * cq + jnp.arange(cq, dtype=jnp.int32)
+
+        # checkpoint: backward recomputes the (Cq,Ck) probability tile instead
+        # of AD saving it per chunk pair (which would be O(S^2) — the exact
+        # memory blow-up flash attention exists to avoid).
+        @jax.checkpoint
+        def kv_body(carry, kj):
+            m, l, acc = carry
+            kjk = jax.lax.dynamic_slice_in_dim(k, kj * ck, ck, axis=1)
+            vjv = jax.lax.dynamic_slice_in_dim(v, kj * ck, ck, axis=1)
+            kpos = kj * ck + jnp.arange(ck, dtype=jnp.int32)
+            logits = (
+                jnp.einsum(
+                    "bqhgd,bchd->bhgqc",
+                    qi_q,
+                    kjk,
+                    preferred_element_type=jnp.float32,
+                )
+                * scale
+            )
+            mask = _chunk_mask(qpos, kpos, window, causal)  # (Cq, Ck)
+            mask = jnp.logical_and(mask, (kpos < sk)[None, :])  # KV padding
+            logits = jnp.where(mask[None, None, None], logits, NEG)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqc,bchd->bhgqd", p, vjv, preferred_element_type=jnp.float32
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hk, g, cq), NEG, jnp.float32)
+        l0 = jnp.zeros((b, hk, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, hk, g, cq, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0), jnp.arange(nk, dtype=jnp.int32)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,Hk,G,Cq,dh)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(
+        q_chunk_body, None, jnp.arange(nq, dtype=jnp.int32)
+    )  # (nq, B, Hk, G, Cq, dh)
+    out = jnp.moveaxis(outs, 0, 1)  # (B, nq, Hk, G, Cq, dh)
+    out = jnp.moveaxis(out, 4, 2)  # (B, nq, Cq, Hk, G, dh)
+    return out.reshape(b, sq + pq, hk, g, dh)[:, :sq]
+
+
+def reference_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: jax.Array | int = 0,
+    causal: bool = True,
+    q_offset: jax.Array | int = 0,
+) -> jax.Array:
+    """O(S^2)-memory oracle for flash_attention (tests)."""
+    b, sq, hk, g, dh = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    logits = (
+        jnp.einsum("bqhgd,bchd->bhgqc", q, k, preferred_element_type=jnp.float32)
+        * scale
+    )
+    qpos = jnp.asarray(q_offset, jnp.int32) + jnp.arange(sq, dtype=jnp.int32)
+    kpos = jnp.arange(sk, dtype=jnp.int32)
+    mask = _chunk_mask(qpos, kpos, jnp.asarray(window, jnp.int32), causal)
+    logits = jnp.where(mask[None, None, None], logits, NEG)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqc,bchd->bqhgd", w, v, preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# ------------------------------------------------------------------ decode
+
+
+def cache_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    *,
+    n_valid: jax.Array,
+    kv_positions: jax.Array | None = None,
+    q_position: jax.Array | None = None,
+    window: int = 0,
+) -> jax.Array:
+    """One-token attention against a cache.
+
+    q: (B, Hk, G, dh); caches (B, Sc, Hk, dh); n_valid: scalar or (B,) count of
+    valid cache slots. For ring (window) caches all slots are valid once warm
+    and positions are encoded in RoPE, so ordering is irrelevant.
+    Returns (B, Hk, G, dh).
+    """
+    del kv_positions, q_position, window  # encoded via RoPE + n_valid
+    b, sc = k_cache.shape[0], k_cache.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    logits = (
+        jnp.einsum(
+            "bhgd,bshd->bhgs", q, k_cache, preferred_element_type=jnp.float32
+        )
+        * scale
+    )
+    valid = jnp.arange(sc)[None, :] < jnp.reshape(
+        jnp.broadcast_to(n_valid, (b,)), (b, 1)
+    )
+    logits = jnp.where(valid[:, None, None, :], logits, NEG)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bhgs,bshd->bhgd", w, v_cache, preferred_element_type=jnp.float32
+    )
+    return out.astype(q.dtype)

@@ -1,0 +1,216 @@
+"""Param records, symbolic sharding specs, and the active mesh policy.
+
+Symbolic spec entries:
+  None  — replicated dim
+  "tp"  — shard over the model axis
+  "dp"  — shard over the data axes (("pod","data") on the multi-pod mesh)
+Resolved against a MeshPolicy at jit/lower time, so model code is mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# ------------------------------------------------------------------ policy
+
+_STATE = threading.local()
+
+
+@dataclass(frozen=True)
+class MeshPolicy:
+    mesh: Mesh
+    dp: tuple[str, ...] = ("data",)
+    tp: str = "model"
+
+    def resolve(self, sym: Sequence) -> P:
+        out = []
+        for e in sym:
+            if e is None:
+                out.append(None)
+            elif e == "tp":
+                out.append(self.tp)
+            elif e == "dp":
+                out.append(self.dp)
+            elif isinstance(e, tuple):  # e.g. ("dp","tp") -> shard over both
+                flat: list[str] = []
+                for s in e:
+                    flat.extend(self.dp if s == "dp" else (self.tp,))
+                out.append(tuple(flat))
+            else:
+                raise ValueError(f"bad sym spec entry {e!r}")
+        return P(*out)
+
+    def sharding(self, sym: Sequence) -> NamedSharding:
+        return NamedSharding(self.mesh, self.resolve(sym))
+
+    def axes_size(self, entry) -> int:
+        spec = self.resolve((entry,))
+        names = spec[0] if isinstance(spec[0], tuple) else (spec[0],)
+        size = 1
+        for nm in names:
+            size *= self.mesh.shape[nm]
+        return size
+
+    def sharding_for(self, shape: Sequence[int], sym: Sequence) -> NamedSharding:
+        """Sharding with non-divisible dims silently demoted to replicated."""
+        sym = tuple(sym[: len(shape)])
+        fixed = []
+        for dim, e in enumerate(sym):
+            if e is None:
+                fixed.append(None)
+            else:
+                fixed.append(e if shape[dim] % self.axes_size(e) == 0 else None)
+        fixed += [None] * (len(shape) - len(fixed))
+        return self.sharding(tuple(fixed))
+
+
+def current_policy() -> Optional[MeshPolicy]:
+    return getattr(_STATE, "policy", None)
+
+
+@contextlib.contextmanager
+def use_policy(policy: Optional[MeshPolicy]):
+    prev = current_policy()
+    _STATE.policy = policy
+    try:
+        yield
+    finally:
+        _STATE.policy = prev
+
+
+def hint(x: jax.Array, *sym) -> jax.Array:
+    """with_sharding_constraint if a policy is active, else identity.
+
+    Dims whose size does not divide the requested axes are silently left
+    replicated (e.g. batch=1 long-context decode on a 32-way dp axis)."""
+    policy = current_policy()
+    if policy is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, policy.sharding_for(x.shape, sym))
+
+
+# ------------------------------------------------------------------ records
+
+
+@dataclass(frozen=True)
+class Rec:
+    """A parameter leaf: shape + symbolic spec + init rule."""
+
+    shape: tuple[int, ...]
+    sym: tuple = ()  # symbolic partition spec, () -> fully replicated
+    init: str = "normal"  # normal | zeros | ones | embed | small
+    scale: float = 1.0  # multiplier on the fan-in init
+
+
+def _init_leaf(key: jax.Array, rec: Rec, dtype) -> jax.Array:
+    if rec.init == "zeros":
+        return jnp.zeros(rec.shape, dtype)
+    if rec.init == "ones":
+        return jnp.ones(rec.shape, dtype)
+    if rec.init == "embed":
+        return (jax.random.normal(key, rec.shape) * 0.02 * rec.scale).astype(dtype)
+    # fan-in scaled normal
+    fan_in = rec.shape[0] if len(rec.shape) >= 2 else max(rec.shape[-1], 1)
+    if len(rec.shape) == 3:  # stacked/expert weights: fan-in is dim -2
+        fan_in = rec.shape[-2]
+    std = rec.scale / np.sqrt(fan_in)
+    return (jax.random.normal(key, rec.shape) * std).astype(dtype)
+
+
+def is_rec(x: Any) -> bool:
+    return isinstance(x, Rec)
+
+
+def materialize(key: jax.Array, recs: Any, dtype=jnp.float32) -> Any:
+    """Rec tree -> param tree (host RNG split per leaf, deterministic order)."""
+    leaves, treedef = jax.tree_util.tree_flatten(recs, is_leaf=is_rec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(k, r, dtype) for k, r in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract(recs: Any, policy: MeshPolicy, dtype=jnp.bfloat16) -> Any:
+    """Rec tree -> ShapeDtypeStruct tree with NamedShardings (no allocation).
+
+    Non-divisible dims demote to replicated (sharding_for) — e.g. whisper's
+    51865 vocab on a 16-way model axis."""
+    return jax.tree_util.tree_map(
+        lambda r: jax.ShapeDtypeStruct(
+            r.shape, dtype, sharding=policy.sharding_for(r.shape, r.sym)
+        ),
+        recs,
+        is_leaf=is_rec,
+    )
+
+
+def spec_tree(recs: Any, policy: MeshPolicy) -> Any:
+    return jax.tree_util.tree_map(
+        lambda r: policy.sharding_for(r.shape, r.sym).spec, recs, is_leaf=is_rec
+    )
+
+
+def sharding_tree(recs: Any, policy: MeshPolicy) -> Any:
+    return jax.tree_util.tree_map(
+        lambda r: policy.sharding_for(r.shape, r.sym), recs, is_leaf=is_rec
+    )
+
+
+def fsdp_recs(recs: Any) -> Any:
+    """ZeRO-3-style param sharding: each Rec additionally shards its first
+    replicated dim over dp (resolved at abstract() time; non-divisible dims
+    demote back to replicated via sharding_for). GSPMD inserts the per-layer
+    all-gathers — params/device drop ~dp-fold at the cost of gather traffic
+    (§Perf H2 change 3)."""
+
+    def f(r: Rec) -> Rec:
+        if len(r.shape) < 2 or r.init == "embed":
+            # token/position tables stay out: gathers from a dp-sharded vocab
+            # turn into per-shard masked lookups + all-reduce — worse than the
+            # (already tp-sharded) table itself.
+            return r
+        sym = list(r.sym) + [None] * (len(r.shape) - len(r.sym))
+        # never shard the stacked-layer dim (dim 0 of ndim>=3 scan params —
+        # the per-step dynamic-slice must stay local); pick the LARGEST
+        # replicated dim (best odds of dividing the dp axes).
+        first = 1 if len(r.shape) >= 3 else 0
+        cands = [
+            (r.shape[d], d)
+            for d in range(first, len(r.shape))
+            if sym[d] is None and r.shape[d] > 1
+        ]
+        if cands:
+            _, dim = max(cands)
+            sym[dim] = "dp"
+        return Rec(r.shape, tuple(sym), r.init, r.scale)
+
+    return jax.tree_util.tree_map(f, recs, is_leaf=is_rec)
+
+
+def stack(recs: Any, n: int) -> Any:
+    """Prepend a stacked-layer dim (replicated) to every Rec — scan params."""
+    return jax.tree_util.tree_map(
+        lambda r: Rec((n,) + r.shape, (None,) + tuple(r.sym), r.init, r.scale),
+        recs,
+        is_leaf=is_rec,
+    )
+
+
+def materialize_stacked(key: jax.Array, recs_one: Any, n: int, dtype=jnp.float32):
+    """Init n independent layers and stack leaves on axis 0 (vmapped init)."""
+    keys = jax.random.split(key, n)
+    layers = [materialize(k, recs_one, dtype) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def param_count(recs: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(recs, is_leaf=is_rec)
+    return sum(int(np.prod(r.shape)) for r in leaves)

@@ -1,0 +1,167 @@
+"""Shared layers: norms, MLPs, embeddings/logits, attention block params."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Rec, hint
+
+
+# ------------------------------------------------------------------ norms
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * (scale.astype(jnp.float32))).astype(
+        x.dtype
+    )
+
+
+def layer_norm(
+    x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * scale + bias).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ MLP
+
+
+def mlp_recs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    f = d_ff or cfg.d_ff
+    d = cfg.d_model
+    if cfg.mlp_act == "relu2":  # ungated (Nemotron / RWKV channel mix)
+        return {
+            "w_in": Rec((d, f), (None, "tp")),
+            "w_out": Rec((f, d), ("tp", None)),
+        }
+    return {
+        "w_gate": Rec((d, f), (None, "tp")),
+        "w_in": Rec((d, f), (None, "tp")),
+        "w_out": Rec((f, d), ("tp", None)),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.mlp_act == "relu2":
+        h = jnp.maximum(x @ p["w_in"], 0.0)
+        return (h * h) @ p["w_out"]
+    act = jax.nn.silu if cfg.mlp_act == "silu" else jax.nn.gelu
+    return (act(x @ p["w_gate"]) * (x @ p["w_in"])) @ p["w_out"]
+
+
+# ------------------------------------------------------------------ embed
+
+
+def embed_recs(cfg: ModelConfig) -> dict:
+    v, d = cfg.vocab, cfg.d_model
+    if cfg.tie_embeddings:
+        # vocab-sharded: lookup pays a psum, logits stay local & vocab-sharded
+        return {"table": Rec((v, d), ("tp", None), "embed")}
+    # untied: d-sharded lookup table (local gather) + vocab-sharded LM head
+    return {
+        "table": Rec((v, d), (None, "tp"), "embed"),
+        "head": Rec((d, v), (None, "tp")),
+    }
+
+
+def embed_lookup(p: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = jnp.take(p["table"], tokens, axis=0)
+    return hint(h, "dp", None, None)
+
+
+def lm_logits(p: dict, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """(B,S,D) -> (B,S,V) vocab-sharded logits, f32."""
+    h32 = h.astype(jnp.float32)
+    if cfg.tie_embeddings:
+        out = h32 @ p["table"].astype(jnp.float32).T
+    else:
+        out = h32 @ p["head"].astype(jnp.float32)
+    return hint(out, "dp", None, "tp")
+
+
+def chunked_ce(
+    p: dict, h: jax.Array, labels: jax.Array, cfg: ModelConfig, chunk: int = 512
+) -> jax.Array:
+    """Mean next-token CE without ever materializing (B,S,V) logits.
+
+    Scans sequence chunks; the checkpointed body recomputes its logits tile in
+    backward, so live memory is O(B * chunk * V / tp) instead of O(B*S*V) —
+    the LM-head analogue of flash attention. h (B,T,D), labels (B,T)."""
+    b, t, d = h.shape
+    pad = (-t) % chunk
+    w = jnp.ones((b, t), jnp.float32)
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+    nc = (t + pad) // chunk
+    hc = jnp.moveaxis(h.reshape(b, nc, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+    wc = jnp.moveaxis(w.reshape(b, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(total, xs):
+        hh, ll, ww = xs
+        logits = lm_logits(p, hh, cfg)  # (B,chunk,V) f32, vocab-sharded
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        true = jnp.take_along_axis(
+            logits, ll[..., None].astype(jnp.int32), axis=-1
+        )[..., 0]
+        return total + jnp.sum((lse - true) * ww), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (hc, lc, wc))
+    return total / (b * t)
+
+
+# ------------------------------------------------------------------ attention block
+
+
+def attn_recs(cfg: ModelConfig) -> dict:
+    d, hq, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    recs = {
+        "wq": Rec((d, hq * dh), (None, "tp")),
+        "wk": Rec((d, hk * dh), (None, "tp")),
+        "wv": Rec((d, hk * dh), (None, "tp")),
+        "wo": Rec((hq * dh, d), ("tp", None)),
+    }
+    if cfg.qkv_bias:
+        recs["bq"] = Rec((hq * dh,), ("tp",), "zeros")
+        recs["bk"] = Rec((hk * dh,), ("tp",), "zeros")
+        recs["bv"] = Rec((hk * dh,), ("tp",), "zeros")
+    if cfg.qk_norm:
+        recs["q_norm"] = Rec((dh,), (), "ones")
+        recs["k_norm"] = Rec((dh,), (), "ones")
+    return recs
+
+
+def qkv_project(
+    p: dict, x: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x (B,S,D) -> q (B,S,Hk,G,dh), k/v (B,S,Hk,dh) (pre-RoPE)."""
+    b, s, _ = x.shape
+    hq, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = hq // hk
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, hk, g, dh)
+    k = k.reshape(b, s, hk, dh)
+    v = v.reshape(b, s, hk, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def attn_out(p: dict, o: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """o (B,S,Hk,G,dh) -> (B,S,D)."""
+    b, s = o.shape[:2]
+    return o.reshape(b, s, cfg.n_heads * cfg.head_dim) @ p["wo"]

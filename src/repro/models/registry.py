@@ -1,0 +1,91 @@
+"""Registry: config -> bound model functions + abstract (dry-run) params."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common, transformer
+from repro.models.common import MeshPolicy
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    recs: Any
+
+    def init_params(self, key: jax.Array, dtype=jnp.float32):
+        return common.materialize(key, self.recs, dtype)
+
+    def _placed_recs(self):
+        return common.fsdp_recs(self.recs) if self.cfg.fsdp else self.recs
+
+    def abstract_params(self, policy: MeshPolicy, dtype=jnp.bfloat16):
+        return common.abstract(self._placed_recs(), policy, dtype)
+
+    def param_shardings(self, policy: MeshPolicy):
+        return common.sharding_tree(self._placed_recs(), policy)
+
+    def param_count(self) -> int:
+        return common.param_count(self.recs)
+
+    # bound functions (params first, jit-friendly)
+    def forward(self, params, batch):
+        h, aux, _ = transformer.forward(params, self.cfg, batch)
+        return h, aux
+
+    def loss(self, params, batch):
+        return transformer.loss_fn(params, self.cfg, batch)
+
+    def prefill(self, params, batch, cache_dtype=jnp.bfloat16):
+        return transformer.prefill(params, self.cfg, batch, cache_dtype)
+
+    def decode_step(self, params, tokens, caches, pos):
+        return transformer.decode_step(params, self.cfg, tokens, caches, pos)
+
+    def init_cache(self, batch: int, seq_len: int, dtype=jnp.bfloat16):
+        return transformer.init_cache(self.cfg, batch, seq_len, dtype)
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    return Model(cfg=cfg, recs=transformer.model_recs(cfg))
+
+
+# ------------------------------------------------------------- input specs
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, key: jax.Array):
+    """Concrete random batch (smoke tests / examples)."""
+    kt, kf = jax.random.split(key)
+    text_len = seq - cfg.n_frontend_tokens if cfg.family == "vlm" else seq
+    out = {
+        "tokens": jax.random.randint(kt, (batch, text_len), 0, cfg.vocab, jnp.int32)
+    }
+    if cfg.family in ("vlm", "encdec"):
+        out["frontend"] = jax.random.normal(
+            kf, (batch, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.float32
+        )
+    return out
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int, policy: MeshPolicy | None):
+    """ShapeDtypeStructs for every model input (dry-run: no allocation)."""
+
+    def sds(shape, dtype, sym):
+        if policy is None:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=policy.sharding(sym))
+
+    text_len = seq - cfg.n_frontend_tokens if cfg.family == "vlm" else seq
+    out = {"tokens": sds((batch, text_len), jnp.int32, ("dp", None))}
+    if cfg.family in ("vlm", "encdec"):
+        out["frontend"] = sds(
+            (batch, cfg.n_frontend_tokens, cfg.frontend_dim),
+            jnp.float32,
+            ("dp", None, None),
+        )
+    return out

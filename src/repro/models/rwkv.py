@@ -1,0 +1,239 @@
+"""RWKV-6 (Finch) block: time-mix with data-dependent decay + channel-mix.
+
+Faithful structure: token-shift interpolation, per-channel data-dependent
+decay w_t = exp(-exp(base + LoRA(x))), WKV linear recurrence with bonus u,
+squared-ReLU channel mix. The recurrence is a lax.scan over time carrying the
+(B,H,K,V) state — O(S) sequential but O(1) state, which is why this arch runs
+the long_500k cell. (A chunked-parallel WKV is a possible §Perf iteration.)"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Rec
+
+LORA = 64
+
+
+def rwkv_dims(cfg: ModelConfig) -> tuple[int, int]:
+    hd = cfg.rwkv.head_size
+    return cfg.d_model // hd, hd
+
+
+def timemix_recs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h, hd = rwkv_dims(cfg)
+    lora = min(LORA, d)
+    return {
+        "mu_r": Rec((d,), (), "zeros"),
+        "mu_k": Rec((d,), (), "zeros"),
+        "mu_v": Rec((d,), (), "zeros"),
+        "mu_w": Rec((d,), (), "zeros"),
+        "mu_g": Rec((d,), (), "zeros"),
+        "w_r": Rec((d, d), (None, "tp")),
+        "w_k": Rec((d, d), (None, "tp")),
+        "w_v": Rec((d, d), (None, "tp")),
+        "w_g": Rec((d, d), (None, "tp")),
+        "w_o": Rec((d, d), ("tp", None)),
+        "decay_base": Rec((d,), (), "zeros"),
+        "decay_lora_a": Rec((d, lora), (None, None), "normal", 0.1),
+        "decay_lora_b": Rec((lora, d), (None, None), "zeros"),
+        "bonus_u": Rec((h, hd), (), "zeros"),
+        "ln_x": Rec((d,), (), "ones"),  # group-norm-ish post scale
+    }
+
+
+def channelmix_recs(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": Rec((d,), (), "zeros"),
+        "w_in": Rec((d, f), (None, "tp")),
+        "w_out": Rec((f, d), ("tp", None)),
+    }
+
+
+def _shift(x: jax.Array, last: jax.Array | None) -> jax.Array:
+    """x_{t-1} stream. x (B,S,D); last (B,1,D) carries across decode steps."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _mix(x, xp, mu):
+    return x + (xp - x) * mu  # lerp(x, x_prev, mu)
+
+
+def _wkv_scan(
+    r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array, u: jax.Array,
+    state0: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """WKV6 recurrence. r,k,v,w: (B,S,H,hd) f32; u: (H,hd); state (B,H,hd,hd).
+
+    y_t = r_t^T (state + (u*k_t) outer v_t);  state' = diag(w_t) state + k_t outer v_t
+    """
+
+    def body(state, inp):
+        rt, kt, vt, wt = inp  # (B,H,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, state + u[None, :, :, None] * kv)
+        state = state * wt[..., None] + kv
+        return state, y
+
+    seq = (
+        jnp.moveaxis(r, 1, 0),
+        jnp.moveaxis(k, 1, 0),
+        jnp.moveaxis(v, 1, 0),
+        jnp.moveaxis(w, 1, 0),
+    )
+    state, ys = jax.lax.scan(body, state0, seq)
+    return jnp.moveaxis(ys, 0, 1), state  # (B,S,H,hd), final state
+
+
+def _wkv_chunked(
+    r: jax.Array, k: jax.Array, v: jax.Array, lw: jax.Array, u: jax.Array,
+    state0: jax.Array, chunk: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked-parallel WKV6 — exact, §Perf H1 (the SSD trick for Finch).
+
+    The recurrence is linear with PER-CHANNEL decay, so within a chunk of C
+    tokens the output splits into three safe-exponent matmul terms:
+
+      y_i = (r_i . exp(ex_i)) S0                         [inter: carry readout]
+          + sum_{j<i} <r_i, k_j . exp(ex_i - cum_j)> v_j [intra; ex_i-cum_j <= 0]
+          + <r_i . u, k_i> v_i                           [diagonal bonus]
+      S' = exp(cum_last) . S0 + sum_j (k_j . exp(cum_last - cum_j))^T v_j
+
+    where lw = log w <= 0 (available EXACTLY: lw = -exp(dd)), cum = inclusive
+    cumsum(lw) within the chunk, ex = exclusive. Every exponent is <= 0, so no
+    rescaling pass is needed. The across-chunk scan carries the (B,H,K,V)
+    state once per C tokens instead of per token: S/C steps and S/C saved
+    carries — the per-token form saved S of them (45 GiB/device at S=4096,
+    the single biggest HBM consumer in the baseline roofline).
+
+    r,k,v,lw: (B,S,H,hd) f32; u (H,hd); state0 (B,H,hd,hd). S % chunk == 0.
+    """
+    b, s, h, hd = r.shape
+    nc = s // chunk
+    c = chunk
+
+    def per_chunk(rc, kc, vc, lwc):
+        # all inputs (B,H,C,hd)
+        cum = jnp.cumsum(lwc, axis=2)  # inclusive
+        ex = cum - lwc  # exclusive
+        last = cum[:, :, -1:, :]  # (B,H,1,hd)
+
+        r_ex = rc * jnp.exp(ex)  # exponent <= 0: safe
+        # intra scores A[i,j] = sum_k r_i[k] k_j[k] exp(ex_i[k] - cum_j[k]), j<i
+        diff = ex[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,H,C,C,hd)
+        tri = jnp.tril(jnp.ones((c, c), bool), -1)  # strictly lower
+        dmat = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+        a = jnp.einsum("bhik,bhjk,bhijk->bhij", rc, kc, dmat)
+        diag = jnp.einsum("bhik,bhik->bhi", rc * u[None, :, None, :], kc)
+        a = a + diag[..., None] * jnp.eye(c, dtype=a.dtype)[None, None]
+        y_intra = jnp.einsum("bhij,bhjv->bhiv", a, vc)
+
+        # state-update ingredients (applied across chunks in the scan)
+        k_dec = kc * jnp.exp(last - cum)  # exponent <= 0
+        s_chunk = jnp.einsum("bhjk,bhjv->bhkv", k_dec, vc)
+        return r_ex, y_intra, s_chunk, jnp.exp(last[:, :, 0, :])
+
+    # (B,S,H,hd) -> (nc, B, H, C, hd)
+    def chunks(x):
+        return jnp.moveaxis(
+            x.reshape(b, nc, c, h, hd).transpose(0, 1, 3, 2, 4), 1, 0
+        )
+
+    r_ex, y_intra, s_chunk, decay = jax.vmap(per_chunk)(
+        chunks(r), chunks(k), chunks(v), chunks(lw)
+    )
+
+    def scan_body(state, inp):
+        r_ex_c, y_in_c, s_c, dec_c = inp
+        y = y_in_c + jnp.einsum("bhik,bhkv->bhiv", r_ex_c, state)
+        new_state = state * dec_c[..., None] + s_c
+        return new_state, y
+
+    state, ys = jax.lax.scan(
+        scan_body, state0, (r_ex, y_intra, s_chunk, decay)
+    )  # ys (nc,B,H,C,hd)
+    y = jnp.moveaxis(ys, 0, 1).transpose(0, 1, 3, 2, 4).reshape(b, s, h, hd)
+    return y, state
+
+
+def timemix_apply(
+    p: dict, x: jax.Array, cfg: ModelConfig, cache: dict | None = None
+) -> tuple[jax.Array, dict]:
+    """x (B,S,D) -> (B,S,D). cache: {'shift': (B,1,D), 'state': (B,H,hd,hd)}."""
+    b, s, d = x.shape
+    h, hd = rwkv_dims(cfg)
+    xp = _shift(x, None if cache is None else cache["shift"])
+
+    r = _mix(x, xp, p["mu_r"]) @ p["w_r"]
+    k = _mix(x, xp, p["mu_k"]) @ p["w_k"]
+    v = _mix(x, xp, p["mu_v"]) @ p["w_v"]
+    g = jax.nn.silu(_mix(x, xp, p["mu_g"]) @ p["w_g"])
+    xw = _mix(x, xp, p["mu_w"])
+    dd = p["decay_base"].astype(jnp.float32) + jnp.tanh(
+        xw.astype(jnp.float32) @ p["decay_lora_a"].astype(jnp.float32)
+    ) @ p["decay_lora_b"].astype(jnp.float32)
+    lw = -jnp.exp(dd)  # log-decay (B,S,D), <= 0 — exact, no log(w) round trip
+
+    rh = r.reshape(b, s, h, hd).astype(jnp.float32)
+    kh = k.reshape(b, s, h, hd).astype(jnp.float32)
+    vh = v.reshape(b, s, h, hd).astype(jnp.float32)
+    lwh = lw.reshape(b, s, h, hd)
+
+    state0 = (
+        jnp.zeros((b, h, hd, hd), jnp.float32)
+        if cache is None
+        else cache["state"]
+    )
+    u = p["bonus_u"].astype(jnp.float32)
+    chunk = cfg.rwkv.chunk
+    if chunk and s > 1:
+        # §Perf H1: chunked-parallel WKV. Front-pad to a chunk multiple with
+        # identity tokens (k=v=0 leaves the state untouched; lw=0 means no
+        # decay), then drop the padded outputs.
+        c = min(chunk, s)
+        pad = (-s) % c
+        if pad:
+            zf = lambda a: jnp.pad(a, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+            rh, kh, vh = zf(rh), zf(kh), zf(vh)
+            lwh = jnp.pad(lwh, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        y, state = _wkv_chunked(rh, kh, vh, lwh, u, state0, c)
+        if pad:
+            y = y[:, pad:]
+    else:
+        y, state = _wkv_scan(rh, kh, vh, jnp.exp(lwh), u, state0)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    # simplified group-norm: rms per head then learned scale
+    yh = y.reshape(b, s, h, hd).astype(jnp.float32)
+    yh = yh * jax.lax.rsqrt(jnp.mean(yh * yh, axis=-1, keepdims=True) + 1e-6)
+    y = (yh.reshape(b, s, d) * p["ln_x"].astype(jnp.float32)).astype(x.dtype)
+    out = (y * g) @ p["w_o"]
+    new_cache = {"shift": x[:, -1:], "state": state}
+    return out, new_cache
+
+
+def channelmix_apply(
+    p: dict, x: jax.Array, cfg: ModelConfig, cache: dict | None = None
+) -> tuple[jax.Array, dict]:
+    xp = _shift(x, None if cache is None else cache["shift"])
+    k = _mix(x, xp, p["mu_k"]) @ p["w_in"]
+    k = jnp.maximum(k, 0.0)
+    out = (k * k) @ p["w_out"]
+    return out, {"shift": x[:, -1:]}
+
+
+def rwkv_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    h, hd = rwkv_dims(cfg)
+    d = cfg.d_model
+    return {
+        "time": {
+            "shift": jnp.zeros((batch, 1, d), dtype),
+            "state": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        },
+        "chan": {"shift": jnp.zeros((batch, 1, d), dtype)},
+    }

@@ -1,0 +1,186 @@
+"""Mamba2 (SSD) block — chunked state-space duality forward + O(1) decode.
+
+Follows the minimal-SSD formulation (Dao & Gu 2024): within-chunk computation
+is batched matmuls (MXU-friendly), across-chunk recurrence is a short scan of
+S/chunk steps carrying the (B,H,P,N) state. Single B/C group (G=1, as Mamba2
+uses n_groups=1 for these sizes); B/C projections are small and replicated,
+heads shard over the model axis via the d_inner columns (head boundaries align
+because d_inner/tp is a multiple of head_dim for every assigned config)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMCfg
+from repro.models.common import Rec
+from repro.models.layers import rms_norm
+
+
+def ssm_dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    ssm: SSMCfg = cfg.ssm
+    d_in = ssm.expand * cfg.d_model
+    n_heads = d_in // ssm.head_dim
+    return d_in, n_heads, ssm.head_dim, ssm.d_state
+
+
+def mamba_recs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in, h, _p, n = ssm_dims(cfg)
+    w = cfg.ssm.conv_width
+    return {
+        "w_z": Rec((d, d_in), (None, "tp")),
+        "w_x": Rec((d, d_in), (None, "tp")),
+        "w_b": Rec((d, n), (None, None)),
+        "w_c": Rec((d, n), (None, None)),
+        "w_dt": Rec((d, h), (None, None)),
+        "conv": Rec((w, d_in + 2 * n), (None, None), "normal", 0.5),
+        "a_log": Rec((h,), (), "zeros"),
+        "dt_bias": Rec((h,), (), "zeros"),
+        "d_skip": Rec((h,), (), "ones"),
+        "norm": Rec((d_in,), (), "ones"),
+        "w_out": Rec((d_in, d), ("tp", None)),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, cache: jax.Array | None):
+    """Depthwise causal conv. u (B,S,C), w (W,C). cache (B,W-1,C) for decode."""
+    width = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((u.shape[0], width - 1, u.shape[2]), u.dtype)
+    else:
+        pad = cache.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)  # (B, S+W-1, C)
+    out = sum(
+        full[:, i : i + u.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    new_cache = full[:, -(width - 1) :, :]
+    return jax.nn.silu(out), new_cache
+
+
+def mamba_apply(
+    p: dict, x: jax.Array, cfg: ModelConfig, return_cache: bool = False
+):
+    """Training/prefill forward. x (B,S,D) -> (B,S,D) [, decode cache].
+
+    Sequences that don't divide the SSD chunk are FRONT-padded with zeros:
+    a zero prefix leaves the (zero-initialized) state and all real-token
+    outputs unchanged, so the final decode state stays exact."""
+    s_real = x.shape[1]
+    c = min(cfg.ssm.chunk, s_real)
+    pad = (-s_real) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, 0), (0, 0)))
+    b, s, _ = x.shape
+    d_in, h, hp, n = ssm_dims(cfg)
+    nc = s // c
+
+    z = x @ p["w_z"]
+    xi = x @ p["w_x"]
+    bb = x @ p["w_b"]
+    cc = x @ p["w_c"]
+    dt = jax.nn.softplus(
+        (x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # (B,S,H)
+
+    conv_in = jnp.concatenate([xi, bb, cc], axis=-1)
+    conv_tail = conv_in[:, -(cfg.ssm.conv_width - 1) :, :]  # decode conv cache
+    conv_out, _ = _causal_conv(conv_in, p["conv"], None)
+    xi, bb, cc = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+
+    xh = xi.reshape(b, s, h, hp).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,) negative
+    la = dt * a[None, None, :]  # log decay per step (B,S,H), <= 0
+
+    # chunk views
+    xc = (xh * dt[..., None]).reshape(b, nc, c, h, hp)  # dt-weighted inputs
+    bc = bb.reshape(b, nc, c, n).astype(jnp.float32)
+    cc_ = cc.reshape(b, nc, c, n).astype(jnp.float32)
+    lac = la.reshape(b, nc, c, h)
+    cum = jnp.cumsum(lac, axis=2)  # (B,nc,c,H) cumulative log decay
+
+    # ---- intra-chunk (lower-triangular attention-like term)
+    # M[t,s] = exp(cum_t - cum_s) for t >= s
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,t,s,H)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    m = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bntN,bnsN->bnts", cc_, bc)  # (B,nc,t,s)
+    y_intra = jnp.einsum("bnts,bntsh,bnshp->bnthp", cb, m, xc)
+
+    # ---- chunk summary states: S_n = sum_s exp(cum_end - cum_s) B_s (dt x)_s
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,c,H)
+    s_chunk = jnp.einsum("bnsN,bnsh,bnshp->bnhNp", bc, decay_to_end, xc)
+
+    # ---- inter-chunk scan
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H)
+
+    def scan_body(state, inp):
+        s_n, dec = inp  # (B,H,N,P), (B,H)
+        out_state = state  # state BEFORE this chunk
+        new = state * dec[..., None, None] + s_n
+        return new, out_state
+
+    s_cs = jnp.moveaxis(s_chunk, 1, 0)  # (nc,B,H,N,P)
+    decs = jnp.moveaxis(chunk_decay, 1, 0)  # (nc,B,H)
+    init = jnp.zeros((b, h, n, hp), jnp.float32)
+    final_state, prev_states = jax.lax.scan(scan_body, init, (s_cs, decs))
+    prev = jnp.moveaxis(prev_states, 0, 1)  # (B,nc,H,N,P) state entering chunk
+
+    y_inter = jnp.einsum(
+        "bntN,bnth,bnhNp->bnthp", cc_, jnp.exp(cum), prev
+    )
+
+    y = (y_intra + y_inter).reshape(b, s, h, hp)
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["w_out"]
+    if pad:
+        out = out[:, pad:]
+    if return_cache:
+        return out, {"state": final_state, "conv": conv_tail}
+    return out
+
+
+def mamba_decode(
+    p: dict, x: jax.Array, cache: dict, cfg: ModelConfig
+) -> tuple[jax.Array, dict]:
+    """One-token step. x (B,1,D); cache {'state': (B,H,N,P), 'conv': (B,W-1,C)}."""
+    b = x.shape[0]
+    d_in, h, hp, n = ssm_dims(cfg)
+
+    z = x @ p["w_z"]
+    xi = x @ p["w_x"]
+    bb = x @ p["w_b"]
+    cc = x @ p["w_c"]
+    dt = jax.nn.softplus(
+        (x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )[:, 0]  # (B,H)
+
+    conv_in = jnp.concatenate([xi, bb, cc], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv"], cache["conv"])
+    xi, bb, cc = jnp.split(conv_out[:, 0], [d_in, d_in + n], axis=-1)
+
+    xh = xi.reshape(b, h, hp).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dec = jnp.exp(dt * a[None, :])  # (B,H)
+
+    state = cache["state"] * dec[..., None, None] + jnp.einsum(
+        "bN,bh,bhp->bhNp", bb.astype(jnp.float32), dt, xh
+    )
+    y = jnp.einsum("bN,bhNp->bhp", cc.astype(jnp.float32), state)
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["w_out"], {"state": state, "conv": new_conv}
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    d_in, h, hp, n = ssm_dims(cfg)
+    w = cfg.ssm.conv_width
+    return {
+        "state": jnp.zeros((batch, h, n, hp), jnp.float32),
+        "conv": jnp.zeros((batch, w - 1, d_in + 2 * n), dtype),
+    }

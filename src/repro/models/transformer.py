@@ -1,0 +1,613 @@
+"""Model assembly for all 10 families: recs, forward, loss, prefill, decode.
+
+Layout decisions (DESIGN.md §4):
+  * train/prefill: jax.lax.scan over stacked layer params (fast compiles at
+    56 layers x 512 partitions) with per-layer metadata (window sizes) as scan
+    xs — one traced code path per arch. Prefill collects per-layer roped K/V
+    as scan ys and slices ring windows afterwards (W | S guarantees ring-slot
+    alignment for every assigned config).
+  * hybrid (Zamba2): scan over groups of `attn_every` mamba layers + one
+    shared-attention invocation, so attention KV is only emitted 1/6 of layers.
+  * decode: unrolled python loop over layers (heterogeneous caches: SWA ring
+    caches, full-attention caches, SSM states, RWKV shifts).
+  * remat: jax.checkpoint around the scan body ('full' or 'dots' policy).
+
+KV cache sharding: batch >= 8 -> (dp, -, tp-on-kv-heads, -); batch == 1 (long
+context) -> sequence-sharded (-, tp, -, -). `hint` drops non-divisible dims.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import cache_attention, flash_attention, rope
+from repro.models.common import Rec, hint, stack
+from repro.models.layers import (
+    attn_out,
+    attn_recs,
+    embed_lookup,
+    embed_recs,
+    layer_norm,
+    lm_logits,
+    mlp_apply,
+    mlp_recs,
+    qkv_project,
+    rms_norm,
+)
+
+ENCDEC_POS_TABLE = 32_768  # whisper learned-position table (backbone contract)
+
+
+# ================================================================== norms
+
+
+def norm_recs(cfg: ModelConfig) -> dict:
+    if cfg.family == "encdec":  # whisper uses LN with bias
+        return {
+            "scale": Rec((cfg.d_model,), (), "ones"),
+            "bias": Rec((cfg.d_model,), (), "zeros"),
+        }
+    return {"scale": Rec((cfg.d_model,), (), "ones")}
+
+
+def norm_apply(p: dict, x: jax.Array) -> jax.Array:
+    if "bias" in p:
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+# ================================================================== blocks
+
+
+def block_recs(
+    cfg: ModelConfig,
+    *,
+    d_ff: int | None = None,
+    use_moe: bool = False,
+    cross: bool = False,
+) -> dict:
+    recs = {"ln1": norm_recs(cfg), "attn": attn_recs(cfg), "ln2": norm_recs(cfg)}
+    if cross:
+        recs["lnx"] = norm_recs(cfg)
+        recs["xattn"] = attn_recs(cfg)
+    recs["mlp"] = moe_mod.moe_recs(cfg) if use_moe else mlp_recs(cfg, d_ff)
+    return recs
+
+
+def dense_block_apply(
+    p: dict,
+    h: jax.Array,
+    cfg: ModelConfig,
+    *,
+    window: jax.Array | int,
+    positions: jax.Array,
+    causal: bool = True,
+    use_moe: bool = False,
+    cross_ctx: jax.Array | None = None,
+    cross_positions: jax.Array | None = None,
+):
+    """Pre-norm block. Returns (h, aux, (k_roped, v)) — kv for prefill caches."""
+    x = norm_apply(p["ln1"], h)
+    q, k, v = qkv_project(p["attn"], x, cfg)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    o = flash_attention(q, k, v, window=window, causal=causal, chunk=cfg.attn_chunk)
+    h = h + attn_out(p["attn"], o, cfg)
+
+    if cross_ctx is not None:
+        xq = norm_apply(p["lnx"], h)
+        cq, _, _ = qkv_project(p["xattn"], xq, cfg)
+        _, ck, cv = qkv_project(p["xattn"], cross_ctx, cfg)
+        co = flash_attention(
+            cq, ck, cv, window=0, causal=False, chunk=cfg.attn_chunk
+        )
+        h = h + attn_out(p["xattn"], co, cfg)
+
+    x2 = norm_apply(p["ln2"], h)
+    aux = jnp.float32(0.0)
+    if use_moe:
+        out, aux = moe_mod.moe_apply(p["mlp"], x2, cfg)
+    else:
+        out = mlp_apply(p["mlp"], x2, cfg)
+    return h + out, aux, (k, v)
+
+
+# ================================================================== recs
+
+
+def model_recs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    base: dict[str, Any] = {"embed": embed_recs(cfg), "out_norm": norm_recs(cfg)}
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        base["layers"] = stack(block_recs(cfg), cfg.n_layers)
+        if fam == "vlm":
+            base["connector"] = Rec((cfg.frontend_dim, d), (None, None))
+    elif fam == "moe":
+        fkd = cfg.moe.first_k_dense
+        if fkd:
+            base["dense_layers"] = stack(block_recs(cfg, d_ff=cfg.moe.d_ff_dense), fkd)
+        base["layers"] = stack(block_recs(cfg, use_moe=True), cfg.n_layers - fkd)
+    elif fam == "hybrid":
+        assert cfg.n_layers % cfg.attn_every == 0
+        base["layers"] = stack(
+            {"ln": norm_recs(cfg), "mamba": ssm_mod.mamba_recs(cfg)}, cfg.n_layers
+        )
+        base["shared"] = block_recs(cfg)  # ONE shared attn+MLP block (Zamba)
+    elif fam == "rwkv":
+        base["ln_in"] = norm_recs(cfg)
+        base["layers"] = stack(
+            {
+                "ln1": norm_recs(cfg),
+                "time": rwkv_mod.timemix_recs(cfg),
+                "ln2": norm_recs(cfg),
+                "chan": rwkv_mod.channelmix_recs(cfg),
+            },
+            cfg.n_layers,
+        )
+    elif fam == "encdec":
+        base["enc_pos"] = Rec((cfg.n_frontend_tokens, d), (None, None), "embed")
+        base["dec_pos"] = Rec((ENCDEC_POS_TABLE, d), (None, None), "embed")
+        base["enc_norm"] = norm_recs(cfg)
+        base["enc_layers"] = stack(block_recs(cfg), cfg.encoder_layers)
+        base["layers"] = stack(block_recs(cfg, cross=True), cfg.n_layers)
+        if cfg.frontend_dim != d:
+            base["frontend_proj"] = Rec((cfg.frontend_dim, d), (None, None))
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return base
+
+
+# ================================================================== scan
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def _scan_layers(stacked, h, cfg: ModelConfig, meta_xs, body, collect: bool):
+    """body(lp, h, meta) -> (h, aux, ys). Scan with remat; ys kept iff collect."""
+
+    def f(carry, xs):
+        hh, aux = carry
+        lp, meta = xs
+        hh, a, ys = body(lp, hh, meta)
+        return (hh, aux + a), (ys if collect else None)
+
+    (h, aux), ys = jax.lax.scan(
+        _remat(f, cfg), (h, jnp.float32(0.0)), (stacked, meta_xs)
+    )
+    return h, aux, ys
+
+
+def _layer_windows_arr(cfg: ModelConfig) -> jax.Array:
+    return jnp.asarray(cfg.layer_windows(), jnp.int32)
+
+
+# ================================================================== forward
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict, collect: bool = False):
+    """Full-sequence forward -> (hidden (B,S,D) post-norm, aux, raw_caches).
+
+    batch: {"tokens": (B,S_text)} + {"frontend": (B,F,fd)} for vlm/encdec.
+    raw_caches (when collect): family-specific stacked scan ys, converted to
+    decode caches by `prefill`.
+    """
+    fam = cfg.family
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    h = embed_lookup(params["embed"], tokens, cfg)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(jnp.sqrt(float(cfg.d_model)), h.dtype)
+
+    if fam == "vlm":
+        prefix = batch["frontend"].astype(h.dtype) @ params["connector"].astype(h.dtype)
+        h = jnp.concatenate([prefix, h], axis=1)
+    s = h.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    h = hint(h, "dp", None, None)
+    raw: Any = None
+
+    if fam in ("dense", "vlm"):
+        def body(lp, hh, win):
+            hh, a, kv = dense_block_apply(lp, hh, cfg, window=win, positions=positions)
+            return hh, a, kv
+
+        h, aux, raw = _scan_layers(
+            params["layers"], h, cfg, _layer_windows_arr(cfg), body, collect
+        )
+
+    elif fam == "moe":
+        aux = jnp.float32(0.0)
+        fkd = cfg.moe.first_k_dense
+        windows = _layer_windows_arr(cfg)
+        raw = {}
+        if fkd:
+            def dbody(lp, hh, win):
+                return dense_block_apply(lp, hh, cfg, window=win, positions=positions)
+
+            h, a0, raw_d = _scan_layers(
+                params["dense_layers"], h, cfg, windows[:fkd], dbody, collect
+            )
+            aux += a0
+            raw["dense"] = raw_d
+
+        def mbody(lp, hh, win):
+            return dense_block_apply(
+                lp, hh, cfg, window=win, positions=positions, use_moe=True
+            )
+
+        h, a1, raw_m = _scan_layers(
+            params["layers"], h, cfg, windows[fkd:], mbody, collect
+        )
+        aux += a1
+        raw["moe"] = raw_m
+
+    elif fam == "hybrid":
+        g = cfg.attn_every
+        ng = cfg.n_layers // g
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape((ng, g) + a.shape[1:]), params["layers"]
+        )
+        shared = params["shared"]
+
+        def group_body(gp, hh, _):
+            def inner(lp, hh2, __):
+                out = ssm_mod.mamba_apply(
+                    lp["mamba"], norm_apply(lp["ln"], hh2), cfg, return_cache=collect
+                )
+                if collect:
+                    out, mc = out
+                    return hh2 + out, jnp.float32(0.0), mc
+                return hh2 + out, jnp.float32(0.0), None
+
+            hh, _a, mcs = _scan_layers(
+                gp, hh, cfg, jnp.zeros((g,), jnp.int32), inner, collect
+            )
+            hh, a, kv = dense_block_apply(
+                shared, hh, cfg, window=0, positions=positions
+            )
+            return hh, a, (mcs, kv) if collect else None
+
+        h, aux, raw = _scan_layers(
+            grouped, h, cfg, jnp.zeros((ng,), jnp.int32), group_body, collect
+        )
+
+    elif fam == "rwkv":
+        h = norm_apply(params["ln_in"], h)
+
+        def body(lp, hh, _):
+            t, tc = rwkv_mod.timemix_apply(lp["time"], norm_apply(lp["ln1"], hh), cfg)
+            hh = hh + t
+            c, cc = rwkv_mod.channelmix_apply(
+                lp["chan"], norm_apply(lp["ln2"], hh), cfg
+            )
+            return hh + c, jnp.float32(0.0), {"time": tc, "chan": cc}
+
+        h, aux, raw = _scan_layers(
+            params["layers"], h, cfg, jnp.zeros((cfg.n_layers,), jnp.int32), body,
+            collect,
+        )
+
+    elif fam == "encdec":
+        enc_h = batch["frontend"].astype(h.dtype)
+        if "frontend_proj" in params:
+            enc_h = enc_h @ params["frontend_proj"].astype(enc_h.dtype)
+        enc_h = enc_h + params["enc_pos"][None].astype(enc_h.dtype)
+        f = enc_h.shape[1]
+        enc_pos_ids = jnp.arange(f, dtype=jnp.int32)[None, :].repeat(b, 0)
+
+        def ebody(lp, hh, _):
+            hh, _a, _kv = dense_block_apply(
+                lp, hh, cfg, window=0, positions=enc_pos_ids, causal=False
+            )
+            return hh, jnp.float32(0.0), None
+
+        enc_h, _, _ = _scan_layers(
+            params["enc_layers"], enc_h, cfg,
+            jnp.zeros((cfg.encoder_layers,), jnp.int32), ebody, False,
+        )
+        enc_h = norm_apply(params["enc_norm"], enc_h)
+
+        h = h + params["dec_pos"][:s][None].astype(h.dtype)
+
+        def dbody(lp, hh, _):
+            return dense_block_apply(
+                lp, hh, cfg, window=0, positions=positions,
+                cross_ctx=enc_h, cross_positions=enc_pos_ids,
+            )
+
+        h, aux, raw_d = _scan_layers(
+            params["layers"], h, cfg, jnp.zeros((cfg.n_layers,), jnp.int32), dbody,
+            collect,
+        )
+        raw = {"self": raw_d, "enc_out": enc_h}
+    else:
+        raise ValueError(fam)
+
+    return norm_apply(params["out_norm"], h), aux, raw
+
+
+# ================================================================== loss
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict) -> tuple[jax.Array, dict]:
+    """Next-token CE (+ MoE aux). VLM: loss only over text positions."""
+    from repro.models.layers import chunked_ce
+
+    h, aux, _ = forward(params, cfg, batch)
+    tokens = batch["tokens"]
+    if cfg.family == "vlm":
+        h = h[:, cfg.n_frontend_tokens :]
+    ce = chunked_ce(params["embed"], h[:, :-1], tokens[:, 1:], cfg)
+    total = ce + 0.01 * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+# ================================================================== caches
+
+
+def _attn_cache_init(cfg, batch, seq_len, window, dtype):
+    sc = min(window, seq_len) if window > 0 else seq_len
+    shape = (batch, sc, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _cache_sym(cache: dict) -> tuple:
+    """Batch-sharded (+ kv-head tp) for batched decode; seq-sharded for b==1."""
+    b = cache["k"].shape[0]
+    return ("dp", None, "tp", None) if b >= 8 else (None, "tp", None, None)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    """Per-layer decode cache pytree (also the dry-run cache abstract shape)."""
+    fam = cfg.family
+    windows = cfg.layer_windows()
+    if fam in ("dense", "vlm", "moe"):
+        return [_attn_cache_init(cfg, batch, seq_len, w, dtype) for w in windows]
+    if fam == "hybrid":
+        caches = []
+        for i in range(cfg.n_layers):
+            c: dict[str, Any] = {"mamba": ssm_mod.mamba_cache_init(cfg, batch, dtype)}
+            if cfg.attn_every and (i + 1) % cfg.attn_every == 0:
+                c["attn"] = _attn_cache_init(cfg, batch, seq_len, 0, dtype)
+            caches.append(c)
+        return caches
+    if fam == "rwkv":
+        return [rwkv_mod.rwkv_cache_init(cfg, batch, dtype) for _ in range(cfg.n_layers)]
+    if fam == "encdec":
+        return {
+            "self": [
+                _attn_cache_init(cfg, batch, seq_len, 0, dtype)
+                for _ in range(cfg.n_layers)
+            ],
+            "enc_out": jnp.zeros((batch, cfg.n_frontend_tokens, cfg.d_model), dtype),
+        }
+    raise ValueError(fam)
+
+
+# ================================================================== prefill
+
+
+def _ring_slice(
+    k: jax.Array, v: jax.Array, window: int, dtype, cache_len: int
+) -> dict:
+    """Full-seq roped K/V (B,S,hk,dh) -> decode cache.
+
+    Window layers keep a W-slot ring (requires W | S for slot alignment);
+    full-attention layers are padded at the END to `cache_len` capacity so
+    decode can append (padding is masked by n_valid)."""
+    s = k.shape[1]
+    if window > 0:
+        cap = min(window, cache_len)
+        if s >= cap:
+            assert s % cap == 0, "ring alignment needs cap | S"
+            k, v = k[:, -cap:], v[:, -cap:]
+        else:  # short prompt: positions p < cap sit at slot p
+            pad = ((0, 0), (0, cap - s), (0, 0), (0, 0))
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    elif cache_len > s:
+        pad = ((0, 0), (0, cache_len - s), (0, 0), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    return {"k": k.astype(dtype), "v": v.astype(dtype)}
+
+
+def prefill(
+    params: dict,
+    cfg: ModelConfig,
+    batch: dict,
+    cache_dtype=jnp.bfloat16,
+    cache_len: int | None = None,
+):
+    """Process the prompt -> (last-token logits (B,V), decode caches, next_pos).
+
+    cache_len: total decode capacity for full-attention caches (default: the
+    prompt length — pass prompt + max_new_tokens for generation)."""
+    h, _aux, raw = forward(params, cfg, batch, collect=True)
+    fam = cfg.family
+    windows = cfg.layer_windows()
+    s_total = h.shape[1]
+    cache_len = cache_len or s_total
+
+    if fam in ("dense", "vlm"):
+        ks, vs = raw  # (L,B,S,hk,dh)
+        caches = [
+            _ring_slice(ks[i], vs[i], windows[i], cache_dtype, cache_len)
+            for i in range(cfg.n_layers)
+        ]
+    elif fam == "moe":
+        caches = []
+        fkd = cfg.moe.first_k_dense
+        if fkd:
+            kd, vd = raw["dense"]
+            caches += [
+                _ring_slice(kd[i], vd[i], windows[i], cache_dtype, cache_len)
+                for i in range(fkd)
+            ]
+        km, vm = raw["moe"]
+        caches += [
+            _ring_slice(km[i], vm[i], windows[fkd + i], cache_dtype, cache_len)
+            for i in range(cfg.n_layers - fkd)
+        ]
+    elif fam == "hybrid":
+        mcs, (ks, vs) = raw  # mcs leaves (ng, g, ...); ks (ng,B,S,hk,dh)
+        g = cfg.attn_every
+        caches = []
+        for i in range(cfg.n_layers):
+            gi, li = divmod(i, g)
+            c: dict[str, Any] = {
+                "mamba": jax.tree_util.tree_map(lambda a: a[gi, li], mcs)
+            }
+            if (i + 1) % g == 0:
+                c["attn"] = _ring_slice(ks[gi], vs[gi], 0, cache_dtype, cache_len)
+            caches.append(c)
+    elif fam == "rwkv":
+        caches = [jax.tree_util.tree_map(lambda a: a[i], raw) for i in range(cfg.n_layers)]
+    elif fam == "encdec":
+        ks, vs = raw["self"]
+        caches = {
+            "self": [
+                _ring_slice(ks[i], vs[i], 0, cache_dtype, cache_len)
+                for i in range(cfg.n_layers)
+            ],
+            "enc_out": raw["enc_out"].astype(cache_dtype),
+        }
+    else:
+        raise ValueError(fam)
+
+    logits = lm_logits(params["embed"], h[:, -1:], cfg)[:, 0]
+    return logits, caches, jnp.int32(s_total)
+
+
+# ================================================================== decode
+
+
+def _cache_write(cache: dict, k: jax.Array, v: jax.Array, pos: jax.Array):
+    """Write one token's k/v (B,1,hk,dh) at ring position."""
+    sc = cache["k"].shape[1]
+    slot = jnp.mod(pos, sc)
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, axis=1
+    )
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, axis=1
+    )
+    return {"k": ck, "v": cv}
+
+
+def _layer_params(stacked: Any, i: int) -> Any:
+    return jax.tree_util.tree_map(lambda a: a[i], stacked)
+
+
+def _attn_decode(p: dict, h: jax.Array, cfg: ModelConfig, cache: dict, pos):
+    """One-token self-attention against a (ring) cache. h (B,1,D)."""
+    x = norm_apply(p["ln1"], h)
+    q, k, v = qkv_project(p["attn"], x, cfg)
+    posb = jnp.broadcast_to(pos, (h.shape[0], 1)).astype(jnp.int32)
+    q = rope(q, posb, cfg.rope_theta)
+    k = rope(k, posb, cfg.rope_theta)
+    cache = _cache_write(cache, k, v, pos)
+    sym = _cache_sym(cache)
+    ck = hint(cache["k"], *sym)
+    cv = hint(cache["v"], *sym)
+    n_valid = jnp.minimum(pos + 1, ck.shape[1])
+    o = cache_attention(q[:, 0], ck, cv, n_valid=n_valid)
+    return h + attn_out(p["attn"], o[:, None], cfg), cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array, caches, pos):
+    """One decoding step. tokens (B,1) -> (logits (B,V), new caches)."""
+    fam = cfg.family
+    h = embed_lookup(params["embed"], tokens, cfg)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(jnp.sqrt(float(cfg.d_model)), h.dtype)
+    new_caches: Any
+
+    if fam in ("dense", "vlm", "moe"):
+        new_caches = []
+        fkd = cfg.moe.first_k_dense if (fam == "moe" and cfg.moe) else 0
+        for i in range(cfg.n_layers):
+            if fam == "moe" and i < fkd:
+                lp, use_moe = _layer_params(params["dense_layers"], i), False
+            elif fam == "moe":
+                lp, use_moe = _layer_params(params["layers"], i - fkd), True
+            else:
+                lp, use_moe = _layer_params(params["layers"], i), False
+            h, c = _attn_decode(lp, h, cfg, caches[i], pos)
+            new_caches.append(c)
+            x = norm_apply(lp["ln2"], h)
+            if use_moe:
+                out, _a = moe_mod.moe_apply(lp["mlp"], x, cfg)
+            else:
+                out = mlp_apply(lp["mlp"], x, cfg)
+            h = h + out
+
+    elif fam == "hybrid":
+        new_caches = []
+        for i in range(cfg.n_layers):
+            lp = _layer_params(params["layers"], i)
+            out, mc = ssm_mod.mamba_decode(
+                lp["mamba"], norm_apply(lp["ln"], h), caches[i]["mamba"], cfg
+            )
+            h = h + out
+            c: dict[str, Any] = {"mamba": mc}
+            if "attn" in caches[i]:
+                h, ac = _attn_decode(params["shared"], h, cfg, caches[i]["attn"], pos)
+                x = norm_apply(params["shared"]["ln2"], h)
+                h = h + mlp_apply(params["shared"]["mlp"], x, cfg)
+                c["attn"] = ac
+            new_caches.append(c)
+
+    elif fam == "rwkv":
+        h = norm_apply(params["ln_in"], h)
+        new_caches = []
+        for i in range(cfg.n_layers):
+            lp = _layer_params(params["layers"], i)
+            t, tc = rwkv_mod.timemix_apply(
+                lp["time"], norm_apply(lp["ln1"], h), cfg, caches[i]["time"]
+            )
+            h = h + t
+            c2, cc = rwkv_mod.channelmix_apply(
+                lp["chan"], norm_apply(lp["ln2"], h), cfg, caches[i]["chan"]
+            )
+            h = h + c2
+            new_caches.append({"time": tc, "chan": cc})
+
+    elif fam == "encdec":
+        pe = jax.lax.dynamic_index_in_dim(params["dec_pos"], pos, keepdims=False)
+        h = h + pe[None, None, :].astype(h.dtype)
+        enc_out = caches["enc_out"]
+        f = enc_out.shape[1]
+        new_self = []
+        for i in range(cfg.n_layers):
+            lp = _layer_params(params["layers"], i)
+            h, c = _attn_decode(lp, h, cfg, caches["self"][i], pos)
+            new_self.append(c)
+            x = norm_apply(lp["lnx"], h)
+            q, _, _ = qkv_project(lp["xattn"], x, cfg)
+            _, ek, ev = qkv_project(lp["xattn"], enc_out, cfg)
+            o = cache_attention(q[:, 0], ek, ev, n_valid=jnp.int32(f))
+            h = h + attn_out(lp["xattn"], o[:, None], cfg)
+            x = norm_apply(lp["ln2"], h)
+            h = h + mlp_apply(lp["mlp"], x, cfg)
+        new_caches = {"self": new_self, "enc_out": enc_out}
+    else:
+        raise ValueError(fam)
+
+    h = norm_apply(params["out_norm"], h)
+    logits = lm_logits(params["embed"], h, cfg)[:, 0]  # (B,V)
+    return logits, new_caches

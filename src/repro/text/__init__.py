@@ -1,0 +1,1 @@
+"""Text substrate: hashing vectorizer, tf-idf weighting, synthetic corpora."""

@@ -1,0 +1,34 @@
+"""Hashing vectorizer for real text (host-side; the jax pipeline starts at
+count matrices). Vocabulary-free and deterministic across processes, which is
+what a 1000-node ingest pipeline needs — no global vocab shuffle."""
+
+from __future__ import annotations
+
+import re
+import zlib
+from typing import Iterable
+
+import numpy as np
+
+_TOKEN = re.compile(r"[a-z0-9]+")
+
+
+def tokenize(text: str) -> list[str]:
+    return _TOKEN.findall(text.lower())
+
+
+def hash_token(tok: str, dim: int) -> tuple[int, float]:
+    """(bucket, sign) — signed hashing halves collision bias."""
+    h = zlib.crc32(tok.encode("utf-8"))
+    return h % dim, 1.0 if (h >> 31) & 1 == 0 else -1.0
+
+
+def vectorize(texts: Iterable[str], dim: int = 2048) -> np.ndarray:
+    """Texts -> (n, dim) signed hashed token counts (f32)."""
+    texts = list(texts)
+    out = np.zeros((len(texts), dim), np.float32)
+    for i, t in enumerate(texts):
+        for tok in tokenize(t):
+            b, s = hash_token(tok, dim)
+            out[i, b] += s
+    return np.abs(out)  # counts must stay non-negative for tf weighting

@@ -1,0 +1,50 @@
+"""End-to-end corpus preparation: generate/ingest -> tf-idf -> sharded rows."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.distrib.sharding import mesh_axis_size, pad_rows_to_multiple, shard_rows
+from repro.text import synth, tfidf
+
+
+class PreparedCorpus(NamedTuple):
+    x: jax.Array  # (n_padded, d) L2-normalized tf-idf rows, sharded
+    w: jax.Array  # (n_padded,) 1.0 real / 0.0 padding, sharded
+    labels: np.ndarray  # (n,) ground truth (host)
+    n: int  # real document count
+
+
+def prepare_synthetic(
+    mesh: Mesh,
+    axes: tuple[str, ...],
+    *,
+    n_docs: int,
+    vocab: int = 2048,
+    n_topics: int = 20,
+    seed: int = 0,
+    **synth_kwargs,
+) -> PreparedCorpus:
+    """Generate a corpus, weight it, and shard it over the mesh."""
+    corpus = synth.make_corpus(
+        n_docs, vocab=vocab, n_topics=n_topics, seed=seed, **synth_kwargs
+    )
+    n_shards = mesh_axis_size(mesh, axes)
+    counts, w = pad_rows_to_multiple(jnp.asarray(corpus.counts), n_shards)
+    counts = shard_rows(mesh, axes, counts)
+    w = shard_rows(mesh, axes, w)
+    x = tfidf.tfidf_distributed(mesh, axes, counts, w)
+    # zero out padding rows so they have no norm
+    x = x * w[:, None]
+    return PreparedCorpus(x=x, w=w, labels=corpus.labels, n=n_docs)
+
+
+def prepare_local(corpus: synth.Corpus) -> tuple[jax.Array, np.ndarray]:
+    """Single-device path used by unit tests and the quickstart example."""
+    x = tfidf.tfidf(jnp.asarray(corpus.counts))
+    return x, corpus.labels

@@ -1,0 +1,70 @@
+"""TF-IDF weighting in the vector space model (paper §2: 'most of them are
+based on the vector space model representation with tf-idf weights').
+
+Single-device entry point plus the distributed document-frequency job: df is a
+per-shard partial sum psum'd across the data axes (another instance of the
+combiner discipline — the reduce payload is (d,) not (n,d))."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.common import l2_normalize
+from repro.distrib.engine import make_job
+
+
+@jax.jit
+def tf_weight(counts: jax.Array) -> jax.Array:
+    """Sub-linear tf: 1 + log(tf) for tf > 0 (Manning et al. [28])."""
+    return jnp.where(counts > 0, 1.0 + jnp.log(jnp.maximum(counts, 1.0)), 0.0)
+
+
+@jax.jit
+def idf_weight(df: jax.Array, n_docs: jax.Array | float) -> jax.Array:
+    """Smoothed idf: log(n / (1 + df))."""
+    return jnp.log(jnp.asarray(n_docs, jnp.float32) / (1.0 + df))
+
+
+@jax.jit
+def document_frequency(counts: jax.Array) -> jax.Array:
+    return jnp.sum((counts > 0).astype(jnp.float32), axis=0)
+
+
+@jax.jit
+def tfidf(counts: jax.Array) -> jax.Array:
+    """counts (n,d) -> L2-normalized tf-idf vectors (n,d) f32."""
+    df = document_frequency(counts)
+    x = tf_weight(counts) * idf_weight(df, counts.shape[0])
+    x = jnp.maximum(x, 0.0)  # idf can go negative for terms in >n/e docs
+    return l2_normalize(x)
+
+
+def tfidf_distributed(
+    mesh: Mesh,
+    axes: tuple[str, ...],
+    counts: jax.Array,
+    w: jax.Array,
+) -> jax.Array:
+    """Distributed tf-idf: one MapReduce job for (df, n), then a local rescale.
+
+    counts rows sharded over `axes`; padding rows have w == 0."""
+
+    def df_map(data, bcast):
+        del bcast
+        c, ws = data["counts"], data["w"]
+        present = (c > 0).astype(jnp.float32) * ws[:, None]
+        return {"df": jnp.sum(present, axis=0), "n": jnp.sum(ws)}
+
+    job = make_job(mesh, axes, df_map, {"df": "sum", "n": "sum"}, name="tfidf_df")
+    stats = job({"counts": counts, "w": w}, {})
+
+    @jax.jit
+    def rescale(c, df, n):
+        x = tf_weight(c) * idf_weight(df, n)
+        return l2_normalize(jnp.maximum(x, 0.0))
+
+    return rescale(counts, stats["df"], stats["n"])

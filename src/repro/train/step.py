@@ -1,0 +1,105 @@
+"""train_step / serve-step builders — the functions the dry-run lowers."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.models.common import MeshPolicy, use_policy
+from repro.train import optimizer as opt_mod
+from repro.train.optimizer import AdamWConfig
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    policy: MeshPolicy | None = None,
+    *,
+    grad_compress: bool = False,
+):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: transformer.loss_fn(p, cfg, batch), has_aux=True
+        )(params)
+
+    def train_step(params, opt_state, batch):
+        with use_policy(policy):
+            n_mb = max(cfg.grad_accum, 1)
+            if n_mb > 1:
+                # §Perf H2 change 4: gradient accumulation — scan over
+                # microbatches so live activations shrink n_mb-fold; grads
+                # accumulate in f32 (compute/comm overlap falls out: each
+                # microbatch's backward collectives overlap the next one's
+                # forward under the latency-hiding scheduler).
+                from repro.models.common import hint
+
+                mb = jax.tree_util.tree_map(
+                    lambda x: hint(
+                        x.reshape((n_mb, x.shape[0] // n_mb) + x.shape[1:]),
+                        None, "dp", *(None,) * (x.ndim - 1),
+                    ),
+                    batch,
+                )
+
+                def body(acc, mbatch):
+                    (loss, metrics), g = grads_of(params, mbatch)
+                    acc = jax.tree_util.tree_map(
+                        lambda a, gi: a + gi.astype(jnp.float32), acc, g
+                    )
+                    return acc, (loss, metrics)
+
+                zeros = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                gsum, (losses, metricses) = jax.lax.scan(body, zeros, mb)
+                grads = jax.tree_util.tree_map(lambda g: g / n_mb, gsum)
+                loss = jnp.mean(losses)
+                metrics = jax.tree_util.tree_map(jnp.mean, metricses)
+            else:
+                (loss, metrics), grads = grads_of(params, batch)
+            if grad_compress:
+                from repro.distrib.compression import fake_compress
+
+                grads = fake_compress(grads)
+            params, opt_state, stats = opt_mod.update(
+                opt_cfg, params, grads, opt_state
+            )
+        return params, opt_state, {"loss": loss, **metrics, **stats}
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, policy: MeshPolicy | None = None):
+    def eval_step(params, batch):
+        with use_policy(policy):
+            loss, metrics = transformer.loss_fn(params, cfg, batch)
+        return {"loss": loss, **metrics}
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig, policy: MeshPolicy | None = None):
+    """Serving prefill: batch -> (last-token logits, decode caches, pos)."""
+
+    def prefill_step(params, batch):
+        with use_policy(policy):
+            return transformer.prefill(params, cfg, batch)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, policy: MeshPolicy | None = None):
+    """Serving decode: one token for every sequence in the batch."""
+
+    def decode_step(params, tokens, caches, pos):
+        with use_policy(policy):
+            return transformer.decode_step(params, cfg, tokens, caches, pos)
+
+    return decode_step

@@ -1,0 +1,34 @@
+"""Shared fixtures. The main pytest process keeps ONE device — multi-device
+tests go through subprocesses (see test_distributed.py)."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def blob_data():
+    """Well-separated unit-norm clusters with ground truth labels."""
+    import jax.numpy as jnp
+
+    from repro.common import l2_normalize
+
+    rng = np.random.default_rng(42)
+    k, n, d = 8, 1200, 64
+    centers = rng.normal(size=(k, d)) * 3.0
+    labels = rng.integers(0, k, size=n)
+    x = centers[labels] + 0.5 * rng.normal(size=(n, d))
+    return l2_normalize(jnp.asarray(x.astype(np.float32))), labels, k
+
+
+@pytest.fixture(scope="session")
+def small_corpus():
+    from repro.text import synth
+
+    return synth.make_corpus(800, vocab=256, n_topics=6, seed=11)

@@ -1,0 +1,202 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis.
+
+Every kernel runs in interpret mode (kernel body executed on CPU); the oracle
+is repro.kernels.ref. Sweeps deliberately include sizes that don't divide the
+block shapes (padding paths) and degenerate sizes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.assign_argmax import assign_argmax_pallas
+from repro.kernels.best_edge import best_edge_pallas
+from repro.kernels.cluster_stats import cluster_stats_pallas
+from repro.kernels.flash_decode import flash_decode_pallas
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32)).astype(dtype)
+
+
+# ------------------------------------------------------------ assign_argmax
+
+
+@pytest.mark.parametrize("n,k,d", [(7, 3, 5), (64, 16, 32), (300, 17, 70),
+                                   (513, 129, 130), (1024, 256, 128)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_assign_argmax_sweep(rng, n, k, d, dtype):
+    x = _rand(rng, (n, d), dtype)
+    c = _rand(rng, (k, d), dtype)
+    ri, rs = ref.assign_argmax(x, c)
+    pi, ps = assign_argmax_pallas(x, c, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(pi))
+    np.testing.assert_allclose(np.asarray(rs), np.asarray(ps), rtol=2e-2, atol=2e-2)
+
+
+def test_assign_argmax_tie_breaks_lowest_index():
+    # identical centers -> every doc must pick index 0
+    x = jnp.ones((9, 4), jnp.float32)
+    c = jnp.ones((5, 4), jnp.float32)
+    pi, _ = assign_argmax_pallas(x, c, interpret=True)
+    assert (np.asarray(pi) == 0).all()
+
+
+def test_assign_argmax_tie_across_tiles(rng):
+    # duplicate best center in tile 0 and tile 1 (bk=8): lowest index wins
+    c = _rand(rng, (20, 16), jnp.float32)
+    c = c.at[13].set(c[2])
+    x = c[2][None, :] * jnp.ones((5, 1))
+    pi, _ = assign_argmax_pallas(x, c, interpret=True, bk=8)
+    assert (np.asarray(pi) == 2).all()
+
+
+# ------------------------------------------------------------ cluster_stats
+
+
+@pytest.mark.parametrize("n,k,d", [(5, 2, 3), (64, 8, 16), (333, 17, 70),
+                                   (400, 100, 257)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_cluster_stats_sweep(rng, n, k, d, dtype):
+    x = _rand(rng, (n, d), dtype)
+    idx = jnp.asarray(rng.integers(0, k, size=n).astype(np.int32))
+    rs_, rc = ref.cluster_stats(x, idx, k)
+    ps_, pc = cluster_stats_pallas(x, idx, k, interpret=True)
+    np.testing.assert_allclose(np.asarray(rs_), np.asarray(ps_), rtol=2e-2, atol=1e-1)
+    np.testing.assert_array_equal(np.asarray(rc), np.asarray(pc))
+
+
+def test_cluster_stats_empty_clusters(rng):
+    # clusters with no members must have zero sums and counts
+    x = _rand(rng, (10, 8), jnp.float32)
+    idx = jnp.zeros((10,), jnp.int32)  # everything in cluster 0
+    s, c = cluster_stats_pallas(x, idx, 5, interpret=True)
+    assert float(c[0]) == 10.0 and (np.asarray(c[1:]) == 0).all()
+    assert (np.abs(np.asarray(s[1:])) < 1e-6).all()
+
+
+# ------------------------------------------------------------ best_edge
+
+
+@pytest.mark.parametrize("r,c,labels", [(6, 6, 2), (90, 121, 5), (256, 256, 9),
+                                        (33, 257, 4)])
+def test_best_edge_sweep(rng, r, c, labels):
+    sim = _rand(rng, (r, c), jnp.float32)
+    lr = jnp.asarray(rng.integers(0, labels, size=r).astype(np.int32))
+    lc = jnp.asarray(rng.integers(0, labels, size=c).astype(np.int32))
+    rj, rs_ = ref.best_edge(sim, lr, lc)
+    pj, ps = best_edge_pallas(sim, lr, lc, interpret=True)
+    np.testing.assert_array_equal(np.asarray(rj), np.asarray(pj))
+    np.testing.assert_allclose(np.asarray(rs_), np.asarray(ps), rtol=1e-6)
+
+
+def test_best_edge_all_same_component(rng):
+    sim = _rand(rng, (12, 12), jnp.float32)
+    lab = jnp.zeros((12,), jnp.int32)
+    pj, ps = best_edge_pallas(sim, lab, lab, interpret=True)
+    assert (np.asarray(pj) == -1).all()
+    assert (np.asarray(ps) == float(jnp.finfo(jnp.float32).min)).all()
+
+
+# ------------------------------------------------------------ flash_decode
+
+
+@pytest.mark.parametrize("s,hk,g,dh,length", [
+    (64, 1, 1, 16, 64), (300, 2, 4, 64, 123), (1024, 4, 2, 128, 1),
+    (513, 2, 6, 32, 257),
+])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_flash_decode_sweep(rng, s, hk, g, dh, length, dtype):
+    h = hk * g
+    q = _rand(rng, (h, dh), dtype)
+    k = _rand(rng, (s, hk, dh), dtype)
+    v = _rand(rng, (s, hk, dh), dtype)
+    ro = ref.flash_decode(q, k, v, length)
+    po = flash_decode_pallas(q, k, v, length, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(ro, np.float32), np.asarray(po, np.float32),
+        rtol=3e-2, atol=3e-2,
+    )
+
+
+def test_flash_decode_skips_invalid_tail(rng):
+    """Positions beyond `length` must not affect the output at all."""
+    q = _rand(rng, (4, 32), jnp.float32)
+    k = _rand(rng, (256, 2, 32), jnp.float32)
+    v = _rand(rng, (256, 2, 32), jnp.float32)
+    o1 = flash_decode_pallas(q, k, v, 100, interpret=True)
+    k2 = k.at[100:].set(1e6)  # garbage in the masked region
+    v2 = v.at[100:].set(-1e6)
+    o2 = flash_decode_pallas(q, k2, v2, 100, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-6)
+
+
+# ------------------------------------------------------------ ops dispatch
+
+
+def test_ops_dispatch_xla_equals_interpret(rng):
+    x = _rand(rng, (100, 33), jnp.float32)
+    c = _rand(rng, (9, 33), jnp.float32)
+    for impl in ("xla", "pallas_interpret"):
+        i, s = ops.assign_argmax(x, c, impl=impl)
+        assert i.shape == (100,) and s.shape == (100,)
+    i1, _ = ops.assign_argmax(x, c, impl="xla")
+    i2, _ = ops.assign_argmax(x, c, impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+# ------------------------------------------------------------ hypothesis
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 120), k=st.integers(1, 40), d=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_assign_argmax_property(n, k, d, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(n, d)).astype(np.float32))
+    c = jnp.asarray(r.normal(size=(k, d)).astype(np.float32))
+    ri, rs = ref.assign_argmax(x, c)
+    pi, ps = assign_argmax_pallas(x, c, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(pi))
+    np.testing.assert_allclose(np.asarray(rs), np.asarray(ps), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 120), k=st.integers(1, 30), d=st.integers(1, 50),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cluster_stats_property(n, k, d, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(n, d)).astype(np.float32))
+    idx = jnp.asarray(r.integers(0, k, size=n).astype(np.int32))
+    rs_, rc = ref.cluster_stats(x, idx, k)
+    ps_, pc = cluster_stats_pallas(x, idx, k, interpret=True)
+    np.testing.assert_allclose(np.asarray(rs_), np.asarray(ps_), rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(rc), np.asarray(pc))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s=st.integers(2, 128), hk=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2, 3]), dh=st.sampled_from([8, 16, 32]),
+    frac=st.floats(0.01, 1.0), seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_decode_property(s, hk, g, dh, frac, seed):
+    r = np.random.default_rng(seed)
+    length = max(1, int(s * frac))
+    q = jnp.asarray(r.normal(size=(hk * g, dh)).astype(np.float32))
+    k = jnp.asarray(r.normal(size=(s, hk, dh)).astype(np.float32))
+    v = jnp.asarray(r.normal(size=(s, hk, dh)).astype(np.float32))
+    ro = ref.flash_decode(q, k, v, length)
+    po = flash_decode_pallas(q, k, v, length, interpret=True)
+    np.testing.assert_allclose(np.asarray(ro), np.asarray(po), rtol=1e-3, atol=1e-3)

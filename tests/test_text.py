@@ -1,0 +1,118 @@
+"""Text substrate: tf-idf, hashing vectorizer, synthetic corpora."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.text import hashing, synth, tfidf
+
+
+# ------------------------------------------------------------------ tfidf
+
+
+def test_tfidf_rows_unit_norm(small_corpus):
+    x = np.asarray(tfidf.tfidf(jnp.asarray(small_corpus.counts)))
+    norms = np.linalg.norm(x, axis=1)
+    nonzero = np.asarray(small_corpus.counts).sum(1) > 0
+    np.testing.assert_allclose(norms[nonzero], 1.0, rtol=1e-5)
+
+
+def test_tfidf_zero_document_stays_zero():
+    counts = jnp.zeros((3, 16), jnp.float32).at[0, 2].set(4.0).at[1, 5].set(1.0)
+    x = np.asarray(tfidf.tfidf(counts))
+    assert (x[2] == 0).all()
+
+
+def test_tfidf_rare_term_outweighs_common():
+    """A term in 1/10 docs must get more weight than one in 9/10 docs."""
+    n = 10
+    counts = np.zeros((n, 4), np.float32)
+    counts[:, 0] = 1.0  # everywhere -> tiny idf
+    counts[0, 1] = 1.0  # rare
+    counts[:7, 2] = 1.0  # common (idf = log(10/8) > 0)
+    counts[:, 3] = 0.5
+    x = np.asarray(tfidf.tfidf(jnp.asarray(counts)))
+    assert x[0, 1] > x[0, 2] > 0
+
+
+def test_idf_negative_clipped():
+    # a term present in ALL docs has idf log(n/(1+n)) < 0 -> weight clips to 0
+    counts = jnp.ones((8, 3), jnp.float32)
+    x = np.asarray(tfidf.tfidf(counts))
+    assert (x == 0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 60), d=st.integers(2, 40), seed=st.integers(0, 2**31 - 1))
+def test_tfidf_property_norms_and_nonneg(n, d, seed):
+    r = np.random.default_rng(seed)
+    counts = jnp.asarray(
+        (r.poisson(0.5, size=(n, d))).astype(np.float32)
+    )
+    x = np.asarray(tfidf.tfidf(counts))
+    assert (x >= 0).all()
+    norms = np.linalg.norm(x, axis=1)
+    assert ((norms < 1e-6) | (np.abs(norms - 1) < 1e-4)).all()
+
+
+# ------------------------------------------------------------------ hashing
+
+
+def test_hashing_deterministic():
+    texts = ["the quick brown fox", "jumps over the lazy dog"]
+    a = hashing.vectorize(texts, dim=128)
+    b = hashing.vectorize(texts, dim=128)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_hashing_counts_nonnegative_and_sane():
+    v = hashing.vectorize(["a a a b"], dim=64)[0]
+    assert (v >= 0).all()
+    assert v.sum() >= 3.0  # 'a' x3 lands in one bucket (sign may cancel b)
+
+
+def test_tokenize_lowercases_and_splits():
+    assert hashing.tokenize("Hello, World-2!") == ["hello", "world", "2"]
+
+
+# ------------------------------------------------------------------ synth
+
+
+def test_corpus_shapes_and_labels(small_corpus):
+    c = small_corpus
+    assert c.counts.shape == (800, 256)
+    assert c.labels.shape == (800,)
+    assert c.labels.min() >= 0 and c.labels.max() < c.n_topics
+
+
+def test_corpus_is_separable(small_corpus):
+    """Same-topic documents must be more similar than cross-topic on average."""
+    import jax
+
+    from repro.core import kmeans, metrics
+
+    x = tfidf.tfidf(jnp.asarray(small_corpus.counts))
+    res = kmeans(x, small_corpus.n_topics, jax.random.PRNGKey(0))
+    pur = float(
+        metrics.purity(
+            res.assignment, jnp.asarray(small_corpus.labels),
+            small_corpus.n_topics, small_corpus.n_topics,
+        )
+    )
+    assert pur > 0.5, f"synthetic corpus not separable enough: purity={pur}"
+
+
+def test_corpus_deterministic_by_seed():
+    a = synth.make_corpus(50, vocab=64, n_topics=3, seed=9)
+    b = synth.make_corpus(50, vocab=64, n_topics=3, seed=9)
+    np.testing.assert_array_equal(a.counts, b.counts)
+    c = synth.make_corpus(50, vocab=64, n_topics=3, seed=10)
+    assert not np.array_equal(a.counts, c.counts)
+
+
+def test_paper_shapes():
+    assert synth.paper_20ng_shape()["n_docs"] == 20_000
+    assert synth.paper_1gb_shape()["n_docs"] == 250_000
+    assert synth.paper_1gb_shape(scale=0.1)["n_docs"] == 25_000
