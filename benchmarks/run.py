@@ -16,6 +16,16 @@ Environment:
   BENCH_SCALE   float, scales n for the '1GB' tables (default 0.08 -> n=20k;
                 1.0 reproduces the paper's n=250k — minutes on CPU)
   BENCH_SMALL   set to 1 to shrink the 20NG tables 4x (CI mode)
+  BENCH_JSON    path: also write machine-readable results (same as --json)
+
+CLI:
+  --json PATH   write [{name, us_per_call, derived}, ...] records for
+                cross-PR perf tracking (diff with tools/bench_diff.py)
+  --only NAMES  comma-separated table function names (e.g. kernel_bench)
+
+Every table driver also times the legacy two-pass (assign_argmax +
+cluster_stats) variant next to the fused single-pass default, so the
+fused-kernel win shows up end to end, not just in the kernel micro-bench.
 
 Beyond the paper: purity/NMI vs ground-truth topics for every run (the
 synthetic corpus has labels; 20_newsgroups evaluation in the paper is
@@ -24,6 +34,8 @@ RSS-only).
 
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import time
 from typing import Callable
@@ -95,7 +107,9 @@ def _bkc_table(table: str, k: int, big_k: int, corpus) -> None:
     if SMALL:
         k, big_k = max(k // 4, 4), max(big_k // 4, 8)
     km, t_km = timed(kmeans, x, k, KEY, max_iters=8)
+    _, t_km2 = timed(kmeans, x, k, KEY, max_iters=8, fused=False)
     bk, t_bk = timed(bkc, x, big_k, k, KEY)
+    _, t_bk2 = timed(bkc, x, big_k, k, KEY, fused=False)
     imp = 100.0 * (1.0 - t_bk / t_km)
     rss_loss = 100.0 * (float(bk.rss) / float(km.rss) - 1.0)
     _RESULTS[("bkc", table)] = dict(
@@ -104,9 +118,13 @@ def _bkc_table(table: str, k: int, big_k: int, corpus) -> None:
     row(f"{table}_kmeans_k{k}", t_km,
         f"rss={float(km.rss):.2f};iters={int(km.iterations)};"
         f"{quality(km.assignment, c, k)}")
+    row(f"{table}_kmeans_twopass_k{k}", t_km2,
+        f"fused_us={t_km:.1f};fused_speedup={t_km2 / t_km:.2f}x")
     row(f"{table}_bkc_k{k}_K{big_k}", t_bk,
         f"rss={float(bk.rss):.2f};improvement={imp:.1f}%;rss_loss={rss_loss:.2f}%;"
         f"{quality(bk.assignment, c, k)}")
+    row(f"{table}_bkc_twopass_k{k}_K{big_k}", t_bk2,
+        f"fused_us={t_bk:.1f};fused_speedup={t_bk2 / t_bk:.2f}x")
 
 
 def _buckshot_table(table: str, k: int, corpus) -> None:
@@ -116,6 +134,7 @@ def _buckshot_table(table: str, k: int, corpus) -> None:
     s = buckshot_sample_size(x.shape[0], k)
     km, t_km = timed(kmeans, x, k, KEY, max_iters=8)
     bs, t_bs = timed(buckshot, x, k, KEY, kmeans_iters=2)
+    _, t_bs2 = timed(buckshot, x, k, KEY, kmeans_iters=2, fused=False)
     imp = 100.0 * (1.0 - t_bs / t_km)
     rss_loss = 100.0 * (float(bs.kmeans.rss) / float(km.rss) - 1.0)
     _RESULTS[("buckshot", table)] = dict(
@@ -124,6 +143,8 @@ def _buckshot_table(table: str, k: int, corpus) -> None:
     row(f"{table}_buckshot_k{k}_s{s}", t_bs,
         f"rss={float(bs.kmeans.rss):.2f};improvement={imp:.1f}%;"
         f"rss_loss={rss_loss:.2f}%;{quality(bs.kmeans.assignment, c, k)}")
+    row(f"{table}_buckshot_twopass_k{k}_s{s}", t_bs2,
+        f"fused_us={t_bs:.1f};fused_speedup={t_bs2 / t_bs:.2f}x")
 
 
 def table1():  # BKC 20NG k=50 K=250
@@ -162,6 +183,9 @@ def table8():
 
 def table9():
     """Summary: time improvement % and RSS loss % for every case above."""
+    if not _RESULTS:
+        print("# table9: empty — it summarizes tables 1-8, select them in the"
+              " same invocation")
     for (algo, table), r in sorted(_RESULTS.items(), key=lambda kv: kv[0][1]):
         row(f"table9_{algo}_{table}_k{r['k']}", r["t_alg"],
             f"improvement={r['imp']:.1f}%;rss_loss={r['rss_loss']:.2f}%")
@@ -217,14 +241,36 @@ def kernel_bench():
     n = 5_000 if SMALL else 20_000
     x = jnp.asarray(rng.normal(size=(n, 2048)).astype(np.float32))
     cents = jnp.asarray(rng.normal(size=(256, 2048)).astype(np.float32))
-    _, t = timed(ops.assign_argmax, x, cents)
+    _, t_assign = timed(ops.assign_argmax, x, cents)
     flops = 2 * n * 2048 * 256
-    row(f"kernel_assign_argmax_{n}x2048x256", t, f"gflops_s={flops / t / 1e3:.1f}")
+    row(f"kernel_assign_argmax_{n}x2048x256", t_assign,
+        f"gflops_s={flops / t_assign / 1e3:.1f}")
 
     idx = jnp.asarray(rng.integers(0, 256, n).astype(np.int32))
-    _, t = timed(ops.cluster_stats, x, idx, 256)
-    row(f"kernel_cluster_stats_{n}x2048_k256", t,
-        f"gbytes_s={n * 2048 * 4 / t / 1e3:.2f}")
+    _, t_stats = timed(ops.cluster_stats, x, idx, 256)
+    row(f"kernel_cluster_stats_{n}x2048_k256", t_stats,
+        f"gbytes_s={n * 2048 * 4 / t_stats / 1e3:.2f}")
+
+    # fused single-pass assign+stats vs the two-pass pipeline above: the
+    # fused kernel reads x once and returns assignment AND all cluster stats
+    xbytes = n * 2048 * 4
+    _, t_fused = timed(ops.assign_stats, x, cents)
+    row(f"kernel_assign_stats_fused_{n}x2048x256", t_fused,
+        f"gbytes_s={xbytes / t_fused / 1e3:.2f}")
+    two_pass = t_assign + t_stats
+    row(f"kernel_fused_vs_two_pass_{n}x2048x256", t_fused,
+        f"two_pass_us={two_pass:.1f};fused_speedup={two_pass / t_fused:.2f}x")
+
+    # bf16 documents, f32 accumulation: half the HBM read on the x pass
+    xb, cb = x.astype(jnp.bfloat16), cents.astype(jnp.bfloat16)
+    _, t_bf16 = timed(ops.assign_stats, xb, cb)
+    row(f"kernel_assign_stats_fused_bf16_{n}x2048x256", t_bf16,
+        f"gbytes_s={xbytes // 2 / t_bf16 / 1e3:.2f};f32_us={t_fused:.1f}")
+
+    # streaming wrapper: same fused kernel scanned over row blocks
+    _, t_chunk = timed(ops.assign_stats_chunked, x, cents, chunk=n // 4)
+    row(f"kernel_assign_stats_chunked_{n}x2048x256", t_chunk,
+        f"chunks=4;oneshot_us={t_fused:.1f}")
 
     sim = jnp.asarray(rng.normal(size=(2000, 2000)).astype(np.float32))
     lab = jnp.asarray(rng.integers(0, 40, 2000).astype(np.int32))
@@ -242,13 +288,40 @@ TABLES = [table1, table2, table3, table4, table5, table6, table7, table8,
           table9, table10, kernel_bench]
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--json", default=os.environ.get("BENCH_JSON") or None,
+        help="write [{name, us_per_call, derived}] records to this path",
+    )
+    ap.add_argument(
+        "--only", default=None,
+        help="comma-separated table function names (e.g. kernel_bench,table1)",
+    )
+    args = ap.parse_args(argv)
+
+    tables = TABLES
+    if args.only:
+        wanted = {t.strip() for t in args.only.split(",")}
+        tables = [fn for fn in TABLES if fn.__name__ in wanted]
+        missing = wanted - {fn.__name__ for fn in tables}
+        if missing:
+            raise SystemExit(f"unknown table(s): {sorted(missing)}")
+
     print("name,us_per_call,derived")
     t0 = time.time()
-    for fn in TABLES:
+    for fn in tables:
         fn()
     print(f"# total bench wall time: {time.time() - t0:.1f}s "
           f"(SMALL={SMALL}, SCALE={SCALE})")
+    if args.json:
+        records = [
+            {"name": n, "us_per_call": us, "derived": derived}
+            for n, us, derived in ROWS
+        ]
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"# wrote {len(records)} records to {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,56 @@
+"""JAX API compatibility shims (0.4.x <-> 0.5+ drift).
+
+The codebase targets the newest public APIs (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh`` with ``axis_types``, dict-returning
+``Compiled.cost_analysis``); this module backfills them on older runtimes so
+every caller can use one spelling.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh: jax.sharding.Mesh,
+    in_specs: Any,
+    out_specs: Any,
+    check_vma: bool = True,
+) -> Callable:
+    """``jax.shard_map`` where available, else the 0.4.x experimental one
+    (whose equivalent of ``check_vma`` is spelled ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with explicit Auto axis types where the runtime knows
+    them (silences the 0.9 deprecation), plain ``jax.make_mesh`` otherwise."""
+    shape, axes = tuple(shape), tuple(axes)
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
+def cost_analysis(compiled: Any) -> dict:
+    """Normalized ``Compiled.cost_analysis()``: newer JAX returns a dict,
+    0.4.x returns a one-element list of dicts. Always returns a dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})

@@ -120,7 +120,7 @@ def join_to_groups(mc: MicroClusters, k: int) -> tuple[jax.Array, jax.Array]:
     return final, s
 
 
-@functools.partial(jax.jit, static_argnames=("big_k", "k", "impl"))
+@functools.partial(jax.jit, static_argnames=("big_k", "k", "impl", "fused"))
 def bkc_fit(
     x: jax.Array,
     init_centers: jax.Array,
@@ -128,9 +128,10 @@ def bkc_fit(
     k: int,
     *,
     impl: str = "xla",
+    fused: bool = True,
 ) -> BKCResult:
     """Run BKC-for-documents given the BigK sampled center documents."""
-    mc, _, _ = build_microclusters(x, init_centers, big_k, impl=impl)
+    mc, _, _ = build_microclusters(x, init_centers, big_k, impl=impl, fused=fused)
     group, s = join_to_groups(mc, k)
 
     # Step 6: centers of the groups = normalized sum of member CF1s.
@@ -138,13 +139,22 @@ def bkc_fit(
     counts = jax.ops.segment_sum(mc.n, group, num_segments=k)
     centers = jnp.where(counts[:, None] > 0, l2_normalize(sums), 0.0)
 
-    # Step 7: final assignment pass (one K-Means-style iteration).
-    idx, best_sim = ops.assign_argmax(x, centers, impl=impl)
+    # Step 7: final assignment pass (one K-Means-style iteration); the fused
+    # path reuses the same single read of x for assignment AND the RSS stats.
+    if fused:
+        st = ops.assign_stats(x, centers, impl=impl)
+        idx, best_sim = st.idx, st.best_sim
+        rss = metrics.rss_from_assignment_stats(
+            st.sums, st.counts, jnp.sum(st.sumsq), k
+        )
+    else:
+        idx, best_sim = ops.assign_argmax(x, centers, impl=impl)
+        rss = metrics.rss(x, idx, k)
     return BKCResult(
         centers=centers,
         assignment=idx,
         best_sim=best_sim,
-        rss=metrics.rss(x, idx, k),
+        rss=rss,
         objective=metrics.cosine_objective(best_sim),
         group_of_mc=group,
         threshold=s,
@@ -158,8 +168,9 @@ def bkc(
     key: jax.Array,
     *,
     impl: str = "xla",
+    fused: bool = True,
 ) -> BKCResult:
     """Convenience entry point: sample BigK center documents, then fit."""
     idx = jax.random.choice(key, x.shape[0], shape=(big_k,), replace=False)
     centers = l2_normalize(x[idx])
-    return bkc_fit(x, centers, big_k, k, impl=impl)
+    return bkc_fit(x, centers, big_k, k, impl=impl, fused=fused)

@@ -33,7 +33,9 @@ class BuckshotResult(NamedTuple):
     init_centers: jax.Array  # (k, d) centers handed to phase 2
 
 
-@functools.partial(jax.jit, static_argnames=("k", "kmeans_iters", "impl"))
+@functools.partial(
+    jax.jit, static_argnames=("k", "kmeans_iters", "impl", "fused")
+)
 def buckshot_fit(
     x: jax.Array,
     sample_idx: jax.Array,
@@ -41,16 +43,22 @@ def buckshot_fit(
     *,
     kmeans_iters: int = 3,
     impl: str = "xla",
+    fused: bool = True,
 ) -> BuckshotResult:
     """Run Buckshot given the sampled document indices (s static via shape)."""
     xs = l2_normalize(x[sample_idx])
     sim = xs @ xs.T  # cosine similarity of the sample (unit-norm rows)
     labels = single_link_labels(sim, k)
 
+    # HAC hands us labels directly (no assign step), so this sample-sized
+    # centroid build stays a plain cluster_stats — it is not the hot loop.
     sums, counts = ops.cluster_stats(xs, labels, k, impl=impl)
     init_centers = jnp.where(counts[:, None] > 0, l2_normalize(sums), 0.0)
 
-    km = kmeans_fit(x, init_centers, k, max_iters=kmeans_iters, tol=0.0, impl=impl)
+    km = kmeans_fit(
+        x, init_centers, k, max_iters=kmeans_iters, tol=0.0, impl=impl,
+        fused=fused,
+    )
     return BuckshotResult(
         kmeans=km,
         sample_idx=sample_idx,
@@ -67,9 +75,12 @@ def buckshot(
     sample_size: int | None = None,
     kmeans_iters: int = 3,
     impl: str = "xla",
+    fused: bool = True,
 ) -> BuckshotResult:
     """Paper defaults: s = sqrt(k n), 2-3 assignment iterations."""
     n = x.shape[0]
     s = sample_size or sampling.buckshot_sample_size(n, k)
     sample_idx = sampling.sample_indices(key, n, s)
-    return buckshot_fit(x, sample_idx, k, kmeans_iters=kmeans_iters, impl=impl)
+    return buckshot_fit(
+        x, sample_idx, k, kmeans_iters=kmeans_iters, impl=impl, fused=fused
+    )

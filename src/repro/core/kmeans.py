@@ -1,9 +1,13 @@
 """Spherical K-Means over the MapReduce pattern (PKMeans, Zhao et al. [26]).
 
-One iteration == one MapReduce job:
-  map     -> nearest center per document          (kernels.ops.assign_argmax)
-  combine -> per-shard cluster sums/counts        (kernels.ops.cluster_stats)
-  reduce  -> global new centers                   (psum in the distributed path)
+One iteration == one MapReduce job == ONE fused pass over the documents:
+  map+combine -> nearest center + per-shard cluster stats (ops.assign_stats,
+                 a single kernel: x is read from HBM once per iteration)
+  reduce      -> global new centers                (psum in the distributed path)
+
+``fused=False`` keeps the legacy two-pass path (assign_argmax then
+cluster_stats) for benchmarking the fusion win; production paths default to
+fused.
 
 This module is the single-device reference; distrib/engine.py lifts the exact
 same step onto the mesh. Documents are expected L2-normalized (cosine semantics,
@@ -38,23 +42,35 @@ def init_random_centers(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
     return l2_normalize(x[idx])
 
 
-@functools.partial(jax.jit, static_argnames=("k", "impl"))
+@functools.partial(jax.jit, static_argnames=("k", "impl", "fused"))
 def kmeans_step(
-    x: jax.Array, centers: jax.Array, k: int, *, impl: str = "xla"
+    x: jax.Array,
+    centers: jax.Array,
+    k: int,
+    *,
+    impl: str = "xla",
+    fused: bool = True,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """One full map/combine/reduce iteration on one device.
 
+    fused=True issues exactly ONE assign+stats kernel call (one HBM read of
+    x); fused=False is the legacy two-pass path, kept for benchmarks.
+
     Returns (new_centers, idx, best_sim, sums, counts).
     """
-    idx, best_sim = ops.assign_argmax(x, centers, impl=impl)
-    sums, counts = ops.cluster_stats(x, idx, k, impl=impl)
+    if fused:
+        st = ops.assign_stats(x, centers, impl=impl)
+        idx, best_sim, sums, counts = st.idx, st.best_sim, st.sums, st.counts
+    else:
+        idx, best_sim = ops.assign_argmax(x, centers, impl=impl)
+        sums, counts = ops.cluster_stats(x, idx, k, impl=impl)
     means = sums / jnp.maximum(counts, 1.0)[:, None]
     new_centers = jnp.where(counts[:, None] > 0, l2_normalize(means), centers)
     return new_centers, idx, best_sim, sums, counts
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "max_iters", "impl")
+    jax.jit, static_argnames=("k", "max_iters", "impl", "fused")
 )
 def kmeans_fit(
     x: jax.Array,
@@ -64,6 +80,7 @@ def kmeans_fit(
     max_iters: int = 8,
     tol: float = 1e-4,
     impl: str = "xla",
+    fused: bool = True,
 ) -> KMeansResult:
     """Iterate to convergence (max center movement < tol) or max_iters."""
 
@@ -74,19 +91,30 @@ def kmeans_fit(
 
     def body(state):
         centers, _, it = state
-        new_centers, _, _, _, _ = kmeans_step(x, centers, k, impl=impl)
+        new_centers, _, _, _, _ = kmeans_step(
+            x, centers, k, impl=impl, fused=fused
+        )
         return new_centers, centers, it + 1
 
     far = init_centers + 10.0  # force first iteration
     centers, _, iters = jax.lax.while_loop(
         cond, body, (init_centers, far, jnp.int32(0))
     )
-    idx, best_sim = ops.assign_argmax(x, centers, impl=impl)
+    if fused:
+        # final assignment AND the RSS stats from the same single pass
+        st = ops.assign_stats(x, centers, impl=impl)
+        idx, best_sim = st.idx, st.best_sim
+        rss = metrics.rss_from_assignment_stats(
+            st.sums, st.counts, jnp.sum(st.sumsq), k
+        )
+    else:
+        idx, best_sim = ops.assign_argmax(x, centers, impl=impl)
+        rss = metrics.rss(x, idx, k)
     return KMeansResult(
         centers=centers,
         assignment=idx,
         best_sim=best_sim,
-        rss=metrics.rss(x, idx, k),
+        rss=rss,
         objective=metrics.cosine_objective(best_sim),
         iterations=iters,
     )
@@ -101,10 +129,11 @@ def kmeans(
     tol: float = 1e-4,
     init_centers: jax.Array | None = None,
     impl: str = "xla",
+    fused: bool = True,
 ) -> KMeansResult:
     """Convenience entry point with the paper's random-document init."""
     if init_centers is None:
         init_centers = init_random_centers(key, x, k)
     return kmeans_fit(
-        x, init_centers, k, max_iters=max_iters, tol=tol, impl=impl
+        x, init_centers, k, max_iters=max_iters, tol=tol, impl=impl, fused=fused
     )

@@ -32,19 +32,34 @@ class MicroClusters(NamedTuple):
     valid: jax.Array  # (K,) bool, False for empty micro-clusters
 
 
-@functools.partial(jax.jit, static_argnames=("big_k", "impl"))
+@functools.partial(jax.jit, static_argnames=("big_k", "impl", "fused"))
 def build_microclusters(
-    x: jax.Array, centers: jax.Array, big_k: int, *, impl: str = "xla"
+    x: jax.Array,
+    centers: jax.Array,
+    big_k: int,
+    *,
+    impl: str = "xla",
+    fused: bool = True,
 ) -> tuple[MicroClusters, jax.Array, jax.Array]:
     """BKC steps 2-3: assign every doc to its most similar center, build MCs.
 
+    fused=True gets assignment + CF1 + counts + CF2 + min_sim from ONE
+    assign_stats pass (no separate cluster_stats / segment_sum / segment_min
+    passes over x); fused=False keeps the legacy multi-pass path for
+    benchmarks.
+
     Returns (micro_clusters, idx, best_sim).
     """
-    idx, best_sim = ops.assign_argmax(x, centers, impl=impl)
-    sums, counts = ops.cluster_stats(x, idx, big_k, impl=impl)
-    sq = jnp.sum(x.astype(jnp.float32) ** 2, axis=1)
-    cf2 = jax.ops.segment_sum(sq, idx, num_segments=big_k)
-    min_sim = segment_min(best_sim, idx, big_k)
+    if fused:
+        st = ops.assign_stats(x, centers, impl=impl)
+        idx, best_sim = st.idx, st.best_sim
+        sums, counts, cf2, min_sim = st.sums, st.counts, st.sumsq, st.min_sim
+    else:
+        idx, best_sim = ops.assign_argmax(x, centers, impl=impl)
+        sums, counts = ops.cluster_stats(x, idx, big_k, impl=impl)
+        sq = jnp.sum(x.astype(jnp.float32) ** 2, axis=1)
+        cf2 = jax.ops.segment_sum(sq, idx, num_segments=big_k)
+        min_sim = segment_min(best_sim, idx, big_k)
     valid = counts > 0
     min_sim = jnp.where(valid, min_sim, 1.0)  # empty MC: neutral
     return (

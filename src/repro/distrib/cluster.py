@@ -34,8 +34,6 @@ from repro.distrib.engine import make_job
 from repro.distrib.sharding import mesh_axis_size
 from repro.kernels import ops
 
-BIG = jnp.float32(jnp.finfo(jnp.float32).max)
-
 
 class DistClusterResult(NamedTuple):
     centers: jax.Array  # (k, d) replicated
@@ -53,35 +51,36 @@ def _assign_stats_map(
 ):
     """map+combine for one K-Means iteration (also BKC job 3).
 
-    prezeroed=True asserts padding rows of x are already zero (the pipeline
-    zeroes them): the n x d ``x * w`` temporary is skipped entirely — zero
-    rows contribute nothing to sums/sq, and counts/obj still honor w.
-    (§Perf H3 change 1: removes a full read+write of the document shard.)
+    ONE fused assign_stats kernel per shard: assignment, weighted sums,
+    counts, and squared norms all come from a single HBM read of the document
+    shard (the weights are applied in-kernel, so the old ``x * w`` temporary
+    and the separate cluster_stats / segment_sum passes are gone entirely —
+    the shard is the paper's combiner, now at kernel granularity).
+
+    prezeroed is retained for API compatibility but no longer changes the
+    computation: the fused kernel weights rows in VMEM either way.
 
     unit_norm=True asserts real rows are L2-normalized (tf-idf pipeline
-    guarantees it): sum of squared norms is exactly sum(w), removing another
-    full pass over the shard. (§Perf H3 change 3.)
+    guarantees it): sum of squared norms is exactly sum(w), skipping even the
+    fused kernel's sumsq term in the scalar reduction.
     """
+    del prezeroed
 
     def map_combine(data, bcast):
         x, w = data["x"], data["w"]
-        centers = bcast["centers"]
-        idx, sim = ops.assign_argmax(x, centers, impl=impl)
-        xw = x if prezeroed else x * w[:, None]
-        sums, _ = ops.cluster_stats(xw, idx, k, impl=impl)
-        counts = jax.ops.segment_sum(w, idx, num_segments=k)
+        st = ops.assign_stats(x, bcast["centers"], w, impl=impl)
         if unit_norm:
             sq = jnp.sum(w)  # |x_i|^2 == 1 for real rows, 0 for padding
         else:
-            sq = jnp.sum(jnp.sum(x.astype(jnp.float32) ** 2, axis=1) * w)
-        obj = jnp.sum(w * (1.0 - sim))
+            sq = jnp.sum(st.sumsq)
+        obj = jnp.sum(w * (1.0 - st.best_sim))
         return {
-            "sums": sums,
-            "counts": counts,
+            "sums": st.sums,
+            "counts": st.counts,
             "sq": sq,
             "obj": obj,
-            "idx": idx,
-            "sim": sim,
+            "idx": st.idx,
+            "sim": st.best_sim,
         }
 
     kinds = {
@@ -162,21 +161,16 @@ def bkc_distributed(
 ) -> DistClusterResult:
     """BKC-for-documents as the paper's three MapReduce jobs."""
 
-    # ---- job 1: micro-cluster statistics (map: assign; combine: CF partials;
-    # reduce: psum / pmin)
+    # ---- job 1: micro-cluster statistics (map+combine: ONE fused kernel per
+    # shard yielding n/CF1/CF2/min_sim from a single read; reduce: psum / pmin)
     def mc_map(data, bcast):
-        xs, ws = data["x"], data["w"]
-        centers = bcast["centers"]
-        idx, sim = ops.assign_argmax(xs, centers, impl=impl)
-        xw = xs * ws[:, None]
-        cf1, _ = ops.cluster_stats(xw, idx, big_k, impl=impl)
-        n = jax.ops.segment_sum(ws, idx, num_segments=big_k)
-        cf2 = jax.ops.segment_sum(
-            ws * jnp.sum(xs.astype(jnp.float32) ** 2, axis=1), idx, num_segments=big_k
-        )
-        sim_masked = jnp.where(ws > 0, sim, BIG)
-        min_sim = jax.ops.segment_min(sim_masked, idx, num_segments=big_k)
-        return {"n": n, "cf1": cf1, "cf2": cf2, "min_sim": min_sim}
+        st = ops.assign_stats(data["x"], bcast["centers"], data["w"], impl=impl)
+        return {
+            "n": st.counts,
+            "cf1": st.sums,
+            "cf2": st.sumsq,
+            "min_sim": st.min_sim,
+        }
 
     job1 = make_job(
         mesh,

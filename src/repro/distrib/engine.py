@@ -22,6 +22,7 @@ import jax
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.distrib.sharding import data_spec
 
 _REDUCERS: dict[str, Callable[[jax.Array, Any], jax.Array]] = {
@@ -82,7 +83,7 @@ def make_job(
         )
         # check_vma=False: the 'gather' reducer (all_gather tiled) produces
         # replicated values that the static VMA inference cannot prove.
-        f = jax.shard_map(
+        f = shard_map(
             inner, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
         )
         return f(data, bcast)

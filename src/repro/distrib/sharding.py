@@ -13,12 +13,10 @@ from jax.sharding import PartitionSpec as P
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
-    """jax.make_mesh with explicit Auto axis types (silences 0.9 deprecation)."""
-    return jax.make_mesh(
-        tuple(shape),
-        tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    """jax.make_mesh with Auto axis types where the runtime supports them."""
+    from repro.compat import make_mesh as _make_mesh
+
+    return _make_mesh(shape, axes)
 
 
 def make_flat_mesh(n_devices: int | None = None, axis: str = "data") -> Mesh:

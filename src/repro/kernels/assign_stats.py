@@ -1,0 +1,199 @@
+"""Fused assign+stats Pallas TPU kernel — map AND combine in ONE pass over x.
+
+The paper's efficiency argument is combiner discipline: aggregate locally
+before anything crosses the shuffle. The two-kernel pipeline
+(assign_argmax then cluster_stats) violates that at the memory level — the
+(n, d) document matrix is read from HBM twice per K-Means/BKC iteration.
+This kernel reads each x tile ONCE: while the tile is VMEM-resident it is
+used both to pick the nearest center (k sweep, revisited (max, argmax)
+accumulator — same idiom as assign_argmax.py) and, on the final k step, to
+scatter the tile into per-cluster accumulators via an in-VMEM one-hot matmul
+(same idiom as cluster_stats.py). Five results come out of one HBM read:
+
+  idx (n,), best_sim (n,), sums (k, d), counts (k,), min_sim (k,), sumsq (k,)
+
+Grid: (n_tiles, k_tiles), k innermost.
+  * idx/sim blocks are indexed by the n tile only -> resident across the k
+    sweep (revisiting idiom).
+  * sums/counts/min_sim/sumsq blocks have CONSTANT index maps -> resident in
+    VMEM for the entire grid and written back once at the end. This bounds
+    k*d: the (kp, d) f32 sums accumulator must fit VMEM alongside one x tile
+    and one center tile (~2 MiB each at d=2048) — fine for the paper's
+    k <= ~1k, d = 2048 regime (see DESIGN.md §6).
+
+Row weights: the wrapper always materializes a (n, 1) f32 weight column
+(ones when the caller passes none; zeros for rows it pads in). Inside the
+kernel w scales the one-hot, so padding rows and weight-0 rows contribute
+nothing to sums/counts/sumsq and are excluded from min_sim — this is what
+lets the distributed path drop its separate ``x * w`` pass.
+
+bf16: x and centers may be bf16 — the MXU matmuls and all accumulators run
+f32 (``preferred_element_type``), so the HBM read of x is 2x cheaper at the
+same accumulation precision.
+
+Tie semantics match ref.assign_argmax (first max wins): within a tile
+jnp.argmax takes the first; across k tiles the update is strict (>).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Shared with the standalone assign kernel: same tiling, same tie semantics.
+from repro.kernels.assign_argmax import BK, BN, NEG, _pad_to
+from repro.kernels.ref import BIG
+
+
+def _kernel(
+    x_ref,
+    c_ref,
+    w_ref,
+    idx_ref,
+    sim_ref,
+    sums_ref,
+    counts_ref,
+    min_ref,
+    sq_ref,
+    *,
+    k_real: int,
+    bk: int,
+    nk: int,
+):
+    i = pl.program_id(0)  # n tile
+    j = pl.program_id(1)  # k tile (innermost)
+
+    @pl.when(j == 0)
+    def _init_rows():
+        idx_ref[...] = jnp.full_like(idx_ref, -1)
+        sim_ref[...] = jnp.full_like(sim_ref, NEG)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _init_accumulators():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        min_ref[...] = jnp.full_like(min_ref, BIG)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    x = x_ref[...]  # (BN, d) — full contraction dim, resident for the k sweep
+    c = c_ref[...]  # (BK, d)
+    sims = jax.lax.dot_general(
+        x,
+        c,
+        (((1,), (1,)), ((), ())),  # contract on d: (BN, d) x (BK, d) -> (BN, BK)
+        preferred_element_type=jnp.float32,
+    )
+    # mask padded center columns (global col id >= k_real)
+    col = j * bk + jax.lax.broadcasted_iota(jnp.int32, sims.shape, 1)
+    sims = jnp.where(col < k_real, sims, NEG)
+
+    local_sim = jnp.max(sims, axis=1, keepdims=True)  # (BN, 1)
+    local_idx = (
+        jnp.argmax(sims, axis=1).astype(jnp.int32)[:, None] + j * bk
+    )  # (BN, 1)
+
+    best_sim = sim_ref[...]
+    better = local_sim > best_sim  # strict: earlier tiles win ties
+    sim_ref[...] = jnp.where(better, local_sim, best_sim)
+    idx_ref[...] = jnp.where(better, local_idx, idx_ref[...])
+
+    # After the last k tile the assignment for this n tile is final and x is
+    # STILL in VMEM: fold it into the cluster accumulators (the combiner) so
+    # the tile never has to be re-read from HBM.
+    @pl.when(j == nk - 1)
+    def _combine():
+        idx = idx_ref[...]  # (BN, 1) final assignment
+        sim = sim_ref[...]  # (BN, 1) final best similarity
+        wv = w_ref[...]  # (BN, 1) row weights (0 for padding)
+        kp = sums_ref.shape[0]
+        bn_ = idx.shape[0]
+
+        bins = jax.lax.broadcasted_iota(jnp.int32, (kp, bn_), 0)
+        hot = bins == idx[:, 0][None, :]  # (kp, BN) membership, in VMEM only
+        wrow = wv[:, 0][None, :]  # (1, BN)
+        hot_w = jnp.where(hot, wrow, 0.0).astype(jnp.float32)
+
+        xf = x.astype(jnp.float32)
+        sums_ref[...] += jax.lax.dot_general(
+            hot_w,
+            xf,
+            (((1,), (0,)), ((), ())),  # (kp, BN) @ (BN, d)
+            preferred_element_type=jnp.float32,
+        )
+        counts_ref[...] += jnp.sum(hot_w, axis=1, keepdims=True)
+        rowsq = jnp.sum(xf * xf, axis=1)  # (BN,)
+        sq_ref[...] += jnp.sum(hot_w * rowsq[None, :], axis=1, keepdims=True)
+        member = jnp.where(
+            jnp.logical_and(hot, wrow > 0), sim[:, 0][None, :], BIG
+        )
+        min_ref[...] = jnp.minimum(
+            min_ref[...], jnp.min(member, axis=1, keepdims=True)
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bn", "bk"))
+def assign_stats_pallas(
+    x: jax.Array,
+    centers: jax.Array,
+    w: jax.Array | None = None,
+    *,
+    interpret: bool = False,
+    bn: int = BN,
+    bk: int = BK,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """(n, d), (k, d)[, (n,)] -> (idx, best_sim, sums, counts, min_sim, sumsq).
+
+    Contract identical to ref.assign_stats; single HBM read of x.
+    """
+    n, d = x.shape
+    k = centers.shape[0]
+    bn = min(bn, max(8, n))
+    bk = min(bk, max(8, k))
+    dmult = 128 if d >= 128 else 8
+
+    xp = _pad_to(_pad_to(x, 0, bn), 1, dmult)
+    cp = _pad_to(_pad_to(centers, 0, bk), 1, dmult)
+    wv = jnp.ones((n,), jnp.float32) if w is None else w.astype(jnp.float32)
+    wp = _pad_to(wv[:, None], 0, bn)  # padded rows get weight 0
+    np_, dp = xp.shape
+    kp_c = cp.shape[0]
+    kp = k + ((-k) % 8)  # sublane-align the accumulator bin dimension
+    grid = (np_ // bn, kp_c // bk)
+
+    idx, sim, sums, counts, min_sim, sumsq = pl.pallas_call(
+        functools.partial(_kernel, k_real=k, bk=bk, nk=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, dp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, dp), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp, dp), lambda i, j: (0, 0)),
+            pl.BlockSpec((kp, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((kp, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((kp, 1), lambda i, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, 1), jnp.int32),
+            jax.ShapeDtypeStruct((np_, 1), jnp.float32),
+            jax.ShapeDtypeStruct((kp, dp), jnp.float32),
+            jax.ShapeDtypeStruct((kp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((kp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((kp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, cp, wp)
+    return (
+        idx[:n, 0],
+        sim[:n, 0],
+        sums[:k, :d],
+        counts[:k, 0],
+        min_sim[:k, 0],
+        sumsq[:k, 0],
+    )

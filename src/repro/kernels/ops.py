@@ -13,6 +13,7 @@ Core code imports ONLY from this module, never from the kernels directly.
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +59,105 @@ def cluster_stats(
     from repro.kernels import cluster_stats as kmod
 
     return kmod.cluster_stats_pallas(x, idx, k, interpret=impl == "pallas_interpret")
+
+
+# ---------------------------------------------------------------- fused
+
+
+class AssignStats(NamedTuple):
+    """Everything one K-Means/BKC iteration needs, from ONE pass over x."""
+
+    idx: jax.Array  # (n,) int32 nearest-center assignment
+    best_sim: jax.Array  # (n,) f32 best similarity
+    sums: jax.Array  # (k, d) f32 weighted per-cluster sums (CF1)
+    counts: jax.Array  # (k,) f32 per-cluster weight totals
+    min_sim: jax.Array  # (k,) f32 lowest member similarity (ref.BIG if empty)
+    sumsq: jax.Array  # (k,) f32 weighted sum of squared row norms (CF2)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def assign_stats(
+    x: jax.Array,
+    centers: jax.Array,
+    w: jax.Array | None = None,
+    *,
+    impl: str = "auto",
+) -> AssignStats:
+    """Fused map+combine: assignment AND cluster statistics in one pass.
+
+    The single-read replacement for assign_argmax + cluster_stats (+ the
+    segment_sum/segment_min passes the BKC micro-cluster build used to make).
+    ``w`` optionally weights rows; weight-0 rows are excluded everywhere.
+    """
+    impl = _resolve(impl)
+    if impl == "xla":
+        return AssignStats(*ref.assign_stats_scatter(x, centers, w))
+    from repro.kernels import assign_stats as kmod
+
+    return AssignStats(
+        *kmod.assign_stats_pallas(
+            x, centers, w, interpret=impl == "pallas_interpret"
+        )
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def assign_stats_chunked(
+    x: jax.Array,
+    centers: jax.Array,
+    w: jax.Array | None = None,
+    *,
+    chunk: int = 65_536,
+    impl: str = "auto",
+) -> AssignStats:
+    """Streaming fused pass: scan over row blocks with carried accumulators.
+
+    Runs n far beyond device memory at the same per-row cost as the one-shot
+    kernel: each scan step reads one (chunk, d) block, issues the fused op,
+    and folds (sums, counts, min_sim, sumsq) into the carry while stacking
+    per-row (idx, best_sim). Rows padded to a chunk multiple carry weight 0.
+    """
+    n, d = x.shape
+    k = centers.shape[0]
+    if n <= chunk:
+        return assign_stats(x, centers, w, impl=impl)
+
+    wv = jnp.ones((n,), jnp.float32) if w is None else w.astype(jnp.float32)
+    pad = (-n) % chunk
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, d), x.dtype)])
+        wv = jnp.concatenate([wv, jnp.zeros((pad,), jnp.float32)])
+    xb = x.reshape(-1, chunk, d)
+    wb = wv.reshape(-1, chunk)
+
+    def body(carry, blk):
+        sums, counts, min_sim, sumsq = carry
+        st = assign_stats(blk["x"], centers, blk["w"], impl=impl)
+        carry = (
+            sums + st.sums,
+            counts + st.counts,
+            jnp.minimum(min_sim, st.min_sim),
+            sumsq + st.sumsq,
+        )
+        return carry, (st.idx, st.best_sim)
+
+    init = (
+        jnp.zeros((k, d), jnp.float32),
+        jnp.zeros((k,), jnp.float32),
+        jnp.full((k,), ref.BIG, jnp.float32),
+        jnp.zeros((k,), jnp.float32),
+    )
+    (sums, counts, min_sim, sumsq), (idxs, sims) = jax.lax.scan(
+        body, init, {"x": xb, "w": wb}
+    )
+    return AssignStats(
+        idx=idxs.reshape(-1)[:n],
+        best_sim=sims.reshape(-1)[:n],
+        sums=sums,
+        counts=counts,
+        min_sim=min_sim,
+        sumsq=sumsq,
+    )
 
 
 # ---------------------------------------------------------------- best edge

@@ -24,7 +24,7 @@ import traceback  # noqa: E402
 
 import jax  # noqa: E402
 
-from repro.launch.hlo_costs import parse_hlo_costs  # noqa: E402
+from repro.launch.hlo_costs import parse_hlo_costs, xla_cost_analysis  # noqa: E402
 
 # v5e hardware constants (per chip)
 PEAK_FLOPS = 197e12  # bf16
@@ -38,7 +38,7 @@ def _finish_report(
 ):
     """Shared roofline/memory/collective reporting for any compiled cell."""
     mem = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = xla_cost_analysis(compiled)
     hlo = compiled.as_text()
     parsed = parse_hlo_costs(hlo)  # while bodies x trip count (hlo_costs.py)
     coll = parsed["collectives"]

@@ -33,6 +33,12 @@ import math
 import re
 from dataclasses import dataclass, field
 
+from repro.compat import cost_analysis as xla_cost_analysis  # noqa: F401
+# Re-exported here because this module is the cost-model entry point:
+# ``xla_cost_analysis(compiled)`` normalizes the JAX API drift where
+# ``Compiled.cost_analysis()`` returns a one-element list on 0.4.x and a
+# plain dict on newer releases.
+
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
     "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "s32": 4, "u32": 4,

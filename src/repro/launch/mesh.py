@@ -9,24 +9,19 @@ carries TP / vocab / expert sharding and stays inside a pod (ICI, not DCN).
 
 from __future__ import annotations
 
-import jax
-
+from repro.compat import make_mesh
 from repro.models.common import MeshPolicy
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CI-scale dry-run tests (needs >= prod(shape) devices)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def policy_for(mesh) -> MeshPolicy:

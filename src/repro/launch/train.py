@@ -55,9 +55,9 @@ def main() -> int:
     from repro.train.step import make_train_step
 
     axes = ("data", "model") if len(shape) == 2 else ("pod", "data", "model")
-    mesh = jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape)
-    )
+    from repro.compat import make_mesh
+
+    mesh = make_mesh(shape, axes)
     policy = policy_for(mesh)
     cfg = get_config(args.arch, reduced=args.reduced)
     model = get_model(cfg)

@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Diff two benchmark JSON files (written by ``benchmarks/run.py --json``).
+
+Matches rows by name and reports per-row time changes, flagging regressions
+beyond the threshold (default 10%). Exit code 1 if any regression, so the
+perf trajectory across PRs (BENCH_*.json) can gate in CI:
+
+    python benchmarks/run.py --json BENCH_new.json
+    python tools/bench_diff.py BENCH_old.json BENCH_new.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict[str, dict]:
+    try:
+        with open(path) as f:
+            records = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise SystemExit(f"bench_diff: cannot read {path}: {e}")
+    return {r["name"]: r for r in records}
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("old", help="baseline JSON (earlier PR)")
+    ap.add_argument("new", help="candidate JSON (this PR)")
+    ap.add_argument(
+        "--threshold", type=float, default=0.10,
+        help="relative slowdown that counts as a regression (default 0.10)",
+    )
+    ap.add_argument(
+        "--all", action="store_true",
+        help="print every matched row, not just regressions/improvements",
+    )
+    args = ap.parse_args(argv)
+
+    old, new = load(args.old), load(args.new)
+    common = [n for n in old if n in new]
+    missing = sorted(set(old) - set(new))
+    added = sorted(set(new) - set(old))
+
+    regressions: list[tuple[str, float, float, float]] = []
+    improvements: list[tuple[str, float, float, float]] = []
+    for name in common:
+        t_old = float(old[name]["us_per_call"])
+        t_new = float(new[name]["us_per_call"])
+        if t_old <= 0:
+            continue
+        rel = t_new / t_old - 1.0
+        if rel > args.threshold:
+            regressions.append((name, t_old, t_new, rel))
+        elif rel < -args.threshold:
+            improvements.append((name, t_old, t_new, rel))
+        elif args.all:
+            print(f"  ~ {name}: {t_old:.1f} -> {t_new:.1f} us ({rel:+.1%})")
+
+    for name, t_old, t_new, rel in sorted(improvements, key=lambda r: r[3]):
+        print(f"  + {name}: {t_old:.1f} -> {t_new:.1f} us ({rel:+.1%})")
+    for name, t_old, t_new, rel in sorted(
+        regressions, key=lambda r: r[3], reverse=True
+    ):
+        print(f"  ! {name}: {t_old:.1f} -> {t_new:.1f} us ({rel:+.1%})  REGRESSION")
+
+    if missing:
+        print(f"  rows only in {args.old}: {len(missing)} (e.g. {missing[:3]})")
+    if added:
+        print(f"  rows only in {args.new}: {len(added)} (e.g. {added[:3]})")
+    print(
+        f"{len(common)} compared: {len(improvements)} improved, "
+        f"{len(regressions)} regressed (threshold {args.threshold:.0%})"
+    )
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
