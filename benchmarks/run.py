@@ -8,9 +8,12 @@ experimental grid on the synthetic 20_newsgroups analogue:
   tables 5-7: Buckshot vs K-Means, k in {50,100,200}, s = sqrt(kn)
   table 8   : Buckshot vs K-Means at scale
   table 9   : summary — time improvement % + RSS loss % per case
-  table 10  : speedup model — measured phase fractions + Amdahl projection
-              (1 CPU device; multi-node scaling is certified by the dry-run
-              roofline, not wall clock — DESIGN.md §7)
+  table 10  : speedup model — Amdahl projection derived from the phase rows
+              RECORDED by tables 1-8 (the same records --json writes; no
+              separate phase re-timing). 1 CPU device; multi-node scaling is
+              certified by the dry-run roofline, not wall clock — DESIGN.md §7
+  phase1    : matrix-free Buckshot phase 1 at paper scale (s=16k, d=2048) —
+              the (s, s) sim matrix (1 GiB f32) never materializes
 
 Environment:
   BENCH_SCALE   float, scales n for the '1GB' tables (default 0.08 -> n=20k;
@@ -44,8 +47,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bkc, buckshot, kmeans, metrics
-from repro.core.sampling import buckshot_sample_size
+from repro.common import l2_normalize
+from repro.core import bkc, buckshot, buckshot_phase1, kmeans, metrics
+from repro.core.bkc import join_to_groups
+from repro.core.microcluster import build_microclusters
+from repro.core.sampling import buckshot_sample_size, sample_indices
 from repro.text import synth, tfidf
 
 KEY = jax.random.PRNGKey(0)
@@ -125,6 +131,14 @@ def _bkc_table(table: str, k: int, big_k: int, corpus) -> None:
         f"{quality(bk.assignment, c, k)}")
     row(f"{table}_bkc_twopass_k{k}_K{big_k}", t_bk2,
         f"fused_us={t_bk:.1f};fused_speedup={t_bk2 / t_bk:.2f}x")
+    # phase split via the production entry points; table10 consumes this row
+    cidx = jax.random.choice(KEY, x.shape[0], (big_k,), replace=False)
+    (mc, _, _), t_pass1 = timed(build_microclusters, x, l2_normalize(x[cidx]), big_k)
+    _, t_group = timed(join_to_groups, mc, k)
+    t_pass2 = max(t_bk - t_pass1 - t_group, 0.0)
+    row(f"{table}_bkc_phases_k{k}_K{big_k}", t_bk,
+        f"algo=bkc;pass1_us={t_pass1:.1f};group_us={t_group:.1f};"
+        f"pass2_us={t_pass2:.1f}")
 
 
 def _buckshot_table(table: str, k: int, corpus) -> None:
@@ -145,6 +159,12 @@ def _buckshot_table(table: str, k: int, corpus) -> None:
         f"rss_loss={rss_loss:.2f}%;{quality(bs.kmeans.assignment, c, k)}")
     row(f"{table}_buckshot_twopass_k{k}_s{s}", t_bs2,
         f"fused_us={t_bs:.1f};fused_speedup={t_bs2 / t_bs:.2f}x")
+    # phase split via the production entry points; table10 consumes this row
+    sidx = sample_indices(KEY, x.shape[0], s)
+    _, t_p1 = timed(buckshot_phase1, x, sidx, k)
+    row(f"{table}_buckshot_phases_k{k}_s{s}", t_bs,
+        f"algo=buckshot;phase1_us={t_p1:.1f};"
+        f"phase2_us={max(t_bs - t_p1, 0.0):.1f}")
 
 
 def table1():  # BKC 20NG k=50 K=250
@@ -191,46 +211,49 @@ def table9():
             f"improvement={r['imp']:.1f}%;rss_loss={r['rss_loss']:.2f}%")
 
 
+def _parse_derived(derived: str) -> dict:
+    """'a=1.5;b=2x;c=foo' -> {'a': 1.5, 'b': 2.0, 'c': 'foo'}."""
+    out: dict = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        key, val = part.split("=", 1)
+        try:
+            out[key] = float(val.rstrip("x%"))
+        except ValueError:
+            out[key] = val
+    return out
+
+
 def table10():
-    """Speedup model: phase timing + Amdahl projection for 3/10 shards.
+    """Speedup model: Amdahl projection for 3/10 shards, derived from the
+    ``*_phases_*`` rows RECORDED by tables 1-8 — the exact records ``--json``
+    writes — instead of re-timing phases with a separate hand-rolled pipeline.
 
-    The paper reports multi-node wall-clock speedups; on a single CPU device
-    we measure the per-phase split (parallelizable assignment passes vs
-    replicated group/merge phase) and project the paper's node counts. The
+    Phase model (the paper's): assignment passes over the collection
+    parallelize across nodes; the replicated group/merge (BKC) and the
+    sample-sized HAC (Buckshot) count as the serial fraction. The
     production-mesh certification is the dry-run, not this projection."""
-    x, c = corpus_20ng()
-    k = 13 if SMALL else 50
-    big_k = 64 if SMALL else 250
-
-    from repro.common import l2_normalize
-    from repro.core.bkc import join_to_groups
-    from repro.core.microcluster import build_microclusters
-    from repro.kernels import ops
-
-    idx = jax.random.choice(KEY, x.shape[0], (big_k,), replace=False)
-    centers = l2_normalize(x[idx])
-    (mc, _, _), t_pass1 = timed(build_microclusters, x, centers, big_k)
-    _, t_group = timed(join_to_groups, mc, k)
-    _, t_pass2 = timed(ops.assign_argmax, x, l2_normalize(mc.cf1[:k]))
-    par = (t_pass1 + t_pass2) / (t_pass1 + t_group + t_pass2)
-    for nodes in (3, 10):
-        speedup = 1.0 / ((1 - par) + par / nodes)
-        row(f"table10_bkc_speedup_{nodes}nodes", t_pass1 + t_group + t_pass2,
-            f"parallel_fraction={par:.3f};amdahl_speedup={speedup:.2f}x")
-
-    # Buckshot: HAC phase is sample-sized (serial-ish), phase 2 parallel
-    from repro.core.hac import single_link_labels
-
-    s = buckshot_sample_size(x.shape[0], k)
-    xs = l2_normalize(x[jax.random.choice(KEY, x.shape[0], (s,), replace=False)])
-    _, t_hac = timed(lambda a: single_link_labels(a @ a.T, k), xs)
-    _, t_assign = timed(ops.assign_argmax, x, xs[:k])
-    t_phase2 = 2 * t_assign  # two K-Means iterations
-    par = t_phase2 / (t_hac + t_phase2)
-    for nodes in (3, 10):
-        speedup = 1.0 / ((1 - par) + par / nodes)
-        row(f"table10_buckshot_speedup_{nodes}nodes", t_hac + t_phase2,
-            f"parallel_fraction={par:.3f};amdahl_speedup={speedup:.2f}x")
+    phase_rows = [(n, us, d) for n, us, d in ROWS if "_phases_" in n]
+    if not phase_rows:
+        print("# table10: empty — it derives phase splits from the rows"
+              " tables 1-8 record, select them in the same invocation")
+        return
+    for name, _, derived in phase_rows:
+        f = _parse_derived(derived)
+        if f.get("algo") == "bkc":
+            serial = f["group_us"]
+            par = f["pass1_us"] + f["pass2_us"]
+        else:
+            serial = f["phase1_us"]
+            par = f["phase2_us"]
+        total = serial + par
+        frac = par / max(total, 1e-9)
+        base = name.replace("_phases", "")
+        for nodes in (3, 10):
+            speedup = 1.0 / ((1 - frac) + frac / nodes)
+            row(f"table10_{base}_speedup_{nodes}nodes", total,
+                f"parallel_fraction={frac:.3f};amdahl_speedup={speedup:.2f}x")
 
 
 def kernel_bench():
@@ -261,11 +284,18 @@ def kernel_bench():
     row(f"kernel_fused_vs_two_pass_{n}x2048x256", t_fused,
         f"two_pass_us={two_pass:.1f};fused_speedup={two_pass / t_fused:.2f}x")
 
-    # bf16 documents, f32 accumulation: half the HBM read on the x pass
-    xb, cb = x.astype(jnp.bfloat16), cents.astype(jnp.bfloat16)
-    _, t_bf16 = timed(ops.assign_stats, xb, cb)
-    row(f"kernel_assign_stats_fused_bf16_{n}x2048x256", t_bf16,
-        f"gbytes_s={xbytes // 2 / t_bf16 / 1e3:.2f};f32_us={t_fused:.1f}")
+    # bf16 documents, f32 accumulation: half the HBM read on the x pass.
+    # An HBM-bandwidth play, so TPU-only: on CPU the bf16<->f32 conversions
+    # make it strictly slower and the row just pollutes bench_diff.
+    if jax.default_backend() == "tpu":
+        xb, cb = x.astype(jnp.bfloat16), cents.astype(jnp.bfloat16)
+        _, t_bf16 = timed(ops.assign_stats, xb, cb)
+        row(f"kernel_assign_stats_fused_bf16_{n}x2048x256", t_bf16,
+            f"gbytes_s={xbytes // 2 / t_bf16 / 1e3:.2f};f32_us={t_fused:.1f}")
+    else:
+        print(f"# kernel_assign_stats_fused_bf16_{n}x2048x256: skipped"
+              f" (HBM-bandwidth play, TPU backend only; running on"
+              f" {jax.default_backend()})")
 
     # streaming wrapper: same fused kernel scanned over row blocks
     _, t_chunk = timed(ops.assign_stats_chunked, x, cents, chunk=n // 4)
@@ -277,6 +307,14 @@ def kernel_bench():
     _, t = timed(ops.best_edge, sim, lab, lab)
     row("kernel_best_edge_2000x2000", t, f"gbytes_s={2000 * 2000 * 4 / t / 1e3:.2f}")
 
+    # fused sim build + edge search: what best_edge costs once you stop
+    # pretending someone else paid for the (s, s) matrix
+    xe = jnp.asarray(rng.normal(size=(2000, 256)).astype(np.float32))
+    _, t_se = timed(ops.sim_best_edge, xe, xe, lab, lab)
+    row("kernel_sim_best_edge_2000x2000x256", t_se,
+        f"gflops_s={2 * 2000 * 2000 * 256 / t_se / 1e3:.1f};"
+        f"sim_matrix_bytes_avoided={2000 * 2000 * 4}")
+
     q = jnp.asarray(rng.normal(size=(32, 128)).astype(np.float32))
     kv = jnp.asarray(rng.normal(size=(32_768, 8, 128)).astype(np.float32))
     _, t = timed(ops.flash_decode, q, kv, kv, 32_768)
@@ -284,8 +322,38 @@ def kernel_bench():
         f"gbytes_s={2 * 32_768 * 8 * 128 * 4 / t / 1e3:.2f}")
 
 
+def phase1_bench():
+    """Matrix-free Buckshot phase 1 at paper scale: s = 16k, d = 2048 on CPU.
+
+    The dense path would need the (s, s) similarity matrix — 1 GiB f32 — per
+    Borůvka round just to feed best_edge; the fused path streams (block, s)
+    candidate sweeps, so peak memory is O(s*d + block*s) and the full
+    matrix never exists. One row times the round-0 candidate search (every
+    point a singleton — the most expensive round), one the full phase-1 HAC
+    at a scale where the dense path would already be hundreds of MiB."""
+    from repro.core.hac import single_link_labels_boruvka
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(3)
+    s, d = (4096, 512) if SMALL else (16384, 2048)
+    xs = jnp.asarray(rng.normal(size=(s, d)).astype(np.float32))
+    xs = l2_normalize(xs)
+    labels = jnp.arange(s, dtype=jnp.int32)  # round 0: all singletons
+    _, t = timed(ops.sim_best_edge, xs, xs, labels, labels)
+    row(f"phase1_sim_best_edge_s{s}_d{d}", t,
+        f"gflops_s={2 * s * s * d / t / 1e3:.1f};"
+        f"sim_matrix_bytes_avoided={4 * s * s}")
+
+    s2, d2, k2 = (1024, 256, 16) if SMALL else (4096, 1024, 64)
+    xs2 = l2_normalize(jnp.asarray(rng.normal(size=(s2, d2)).astype(np.float32)))
+    _, t_hac = timed(single_link_labels_boruvka, xs2, k2)
+    row(f"phase1_boruvka_hac_s{s2}_d{d2}_k{k2}", t_hac,
+        f"rounds_max={int(np.ceil(np.log2(s2))) + 1};"
+        f"sim_matrix_bytes_avoided={4 * s2 * s2}")
+
+
 TABLES = [table1, table2, table3, table4, table5, table6, table7, table8,
-          table9, table10, kernel_bench]
+          table9, table10, kernel_bench, phase1_bench]
 
 
 def main(argv: list[str] | None = None) -> None:

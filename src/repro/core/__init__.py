@@ -8,8 +8,18 @@
 """
 
 from repro.core.bkc import BKCResult, bkc, bkc_fit, join_to_groups
-from repro.core.buckshot import BuckshotResult, buckshot, buckshot_fit
-from repro.core.hac import mst_prim, single_link_labels
+from repro.core.buckshot import (
+    BuckshotResult,
+    buckshot,
+    buckshot_fit,
+    buckshot_phase1,
+)
+from repro.core.hac import (
+    boruvka_mst,
+    mst_prim,
+    single_link_labels,
+    single_link_labels_boruvka,
+)
 from repro.core.kmeans import KMeansResult, kmeans, kmeans_fit, kmeans_step
 from repro.core.microcluster import MicroClusters, build_microclusters
 from repro.core import metrics, sampling
@@ -21,8 +31,10 @@ __all__ = [
     "MicroClusters",
     "bkc",
     "bkc_fit",
+    "boruvka_mst",
     "buckshot",
     "buckshot_fit",
+    "buckshot_phase1",
     "build_microclusters",
     "join_to_groups",
     "kmeans",
@@ -32,4 +44,5 @@ __all__ = [
     "mst_prim",
     "sampling",
     "single_link_labels",
+    "single_link_labels_boruvka",
 ]

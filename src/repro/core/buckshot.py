@@ -5,10 +5,15 @@
   Phase 2: K-Means-style assignment of the whole collection with only 2-3
     iterations.
 
-The heavy O(s^2 d) part of phase 1 is the sample similarity matrix — a matmul
-(MXU); the HAC itself is the MST machinery in core/hac.py. Phase 2 reuses the
-PKMeans step (core/kmeans.py), exactly as the paper reuses its §2
-implementation 'for a fair comparison with BKC'.
+Phase 1 is MATRIX-FREE by default (``hac="boruvka"``): O(log s) rounds of the
+fused sim+best-edge kernel, so the (s, s) sample similarity matrix never
+exists and phase-1 peak memory is O(s*d) — the paper's 1GB-collection regime
+(n = 1M, k = 500 -> s ~ 22k, a ~2 GB f32 matrix) fits one device.
+``hac="prim"`` keeps the dense Prim path as the exact oracle. The initial
+centers come from ONE label_stats pass over the sample (the fused labels+stats
+build — HAC hands over labels, so there is no assign step to fuse with).
+Phase 2 reuses the PKMeans step (core/kmeans.py), exactly as the paper reuses
+its §2 implementation 'for a fair comparison with BKC'.
 """
 
 from __future__ import annotations
@@ -21,7 +26,7 @@ import jax.numpy as jnp
 
 from repro.common import l2_normalize
 from repro.core import sampling
-from repro.core.hac import single_link_labels
+from repro.core.hac import single_link_labels, single_link_labels_boruvka
 from repro.core.kmeans import KMeansResult, kmeans_fit
 from repro.kernels import ops
 
@@ -33,8 +38,40 @@ class BuckshotResult(NamedTuple):
     init_centers: jax.Array  # (k, d) centers handed to phase 2
 
 
+@functools.partial(jax.jit, static_argnames=("k", "impl", "hac"))
+def buckshot_phase1(
+    x: jax.Array,
+    sample_idx: jax.Array,
+    k: int,
+    *,
+    impl: str = "xla",
+    hac: str = "boruvka",
+) -> tuple[jax.Array, jax.Array]:
+    """Phase 1 alone: sample HAC labels + initial centers.
+
+    hac = "boruvka" (default): matrix-free single-link via Borůvka rounds of
+      the fused sim+best-edge kernel — O(s*d) memory, O(log s) rounds.
+    hac = "prim": dense (s, s) similarity + Prim MST — the exact oracle path.
+
+    Returns (labels (s,), init_centers (k, d)).
+    """
+    xs = l2_normalize(x[sample_idx])
+    if hac == "prim":
+        labels = single_link_labels(xs @ xs.T, k)
+    elif hac == "boruvka":
+        labels = single_link_labels_boruvka(xs, k, impl=impl)
+    else:
+        raise ValueError(f"unknown hac implementation: {hac!r}")
+
+    # HAC hands us labels directly (no assign step), so the center build is
+    # ONE fused label_stats pass over the sample (d-tiled accumulator grid).
+    sums, counts = ops.label_stats(xs, labels, k, impl=impl)
+    init_centers = jnp.where(counts[:, None] > 0, l2_normalize(sums), 0.0)
+    return labels, init_centers
+
+
 @functools.partial(
-    jax.jit, static_argnames=("k", "kmeans_iters", "impl", "fused")
+    jax.jit, static_argnames=("k", "kmeans_iters", "impl", "fused", "hac")
 )
 def buckshot_fit(
     x: jax.Array,
@@ -44,17 +81,10 @@ def buckshot_fit(
     kmeans_iters: int = 3,
     impl: str = "xla",
     fused: bool = True,
+    hac: str = "boruvka",
 ) -> BuckshotResult:
     """Run Buckshot given the sampled document indices (s static via shape)."""
-    xs = l2_normalize(x[sample_idx])
-    sim = xs @ xs.T  # cosine similarity of the sample (unit-norm rows)
-    labels = single_link_labels(sim, k)
-
-    # HAC hands us labels directly (no assign step), so this sample-sized
-    # centroid build stays a plain cluster_stats — it is not the hot loop.
-    sums, counts = ops.cluster_stats(xs, labels, k, impl=impl)
-    init_centers = jnp.where(counts[:, None] > 0, l2_normalize(sums), 0.0)
-
+    labels, init_centers = buckshot_phase1(x, sample_idx, k, impl=impl, hac=hac)
     km = kmeans_fit(
         x, init_centers, k, max_iters=kmeans_iters, tol=0.0, impl=impl,
         fused=fused,
@@ -76,11 +106,13 @@ def buckshot(
     kmeans_iters: int = 3,
     impl: str = "xla",
     fused: bool = True,
+    hac: str = "boruvka",
 ) -> BuckshotResult:
     """Paper defaults: s = sqrt(k n), 2-3 assignment iterations."""
     n = x.shape[0]
     s = sample_size or sampling.buckshot_sample_size(n, k)
     sample_idx = sampling.sample_indices(key, n, s)
     return buckshot_fit(
-        x, sample_idx, k, kmeans_iters=kmeans_iters, impl=impl, fused=fused
+        x, sample_idx, k, kmeans_iters=kmeans_iters, impl=impl, fused=fused,
+        hac=hac,
     )

@@ -5,22 +5,43 @@ and cutting its k-1 weakest edges — that equivalence is what makes the paper's
 PARABLE-style 'local dendrograms + alignment' parallelizable, and what we
 exploit on TPU:
 
-  * ``mst_prim``: dense O(s^2) Prim inside jit (the sample is s = sqrt(kn),
-    small enough for one device).
+  * ``boruvka_mst`` / ``single_link_labels_boruvka``: the PRODUCTION path —
+    matrix-free Borůvka over ops.sim_best_edge, O(log s) rounds, never
+    materializing the (s, s) similarity matrix (DESIGN.md §8).
+  * ``mst_prim`` / ``single_link_labels``: dense O(s^2) Prim inside jit —
+    survives as the exact test oracle (and for callers that already hold a
+    similarity matrix).
   * ``components_from_edges``: min-label propagation + pointer jumping over the
     kept forest edges (jit, while_loop).
   * distrib/hac_parallel.py lifts the per-round best-edge search onto the mesh
-    (Boruvka), using the same cut — the TPU version of dendrogram alignment.
+    (same merge machinery) — the TPU version of dendrogram alignment.
+
+Tie handling (Borůvka): edges are totally ordered by (weight desc, row asc,
+col asc), which makes each component's proposal unique, so the only duplicate
+proposals are mutual pairs (dropped on the higher root). With that total order
+Borůvka provably emits a max spanning FOREST of s-1 edges.
 """
 
 from __future__ import annotations
 
 import functools
+import math
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.common import l2_normalize
+from repro.kernels import ops
+
 NEG = jnp.finfo(jnp.float32).min
+
+
+class MSTEdges(NamedTuple):
+    u: jax.Array  # (E,) int32 row endpoint (global point id)
+    v: jax.Array  # (E,) int32 col endpoint
+    w: jax.Array  # (E,) f32 similarity
+    valid: jax.Array  # (E,) bool — exactly s-1 True after a full run
 
 
 @jax.jit
@@ -114,3 +135,144 @@ def single_link_labels(sim: jax.Array, k: int) -> jax.Array:
     """Exact single-link HAC cut at k clusters for a dense similarity matrix."""
     eu, ev, ew = mst_prim(sim)
     return cut_forest(eu, ev, ew, sim.shape[0], k)
+
+
+# ----------------------------------------------------------------- Borůvka
+# Matrix-free production path: per round, every point finds its best
+# cross-component edge via ops.sim_best_edge (the (s, s) similarity matrix
+# never exists), then one replicated O(s) alignment merges components.
+
+
+@jax.jit
+def _merge_round(
+    labels: jax.Array,  # (s,) current component labels (min-id)
+    row_w: jax.Array,  # (s,) best cross-edge weight per row (NEG if none)
+    row_j: jax.Array,  # (s,) best cross-edge col per row (-1 if none)
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One Borůvka alignment: per-component best edge, dedupe, merge.
+
+    Returns (new_labels, eu, ev, ew, evalid) with one slot per point id
+    (slot c used iff c is a component root that proposed an edge).
+    """
+    s = labels.shape[0]
+    rows = jnp.arange(s, dtype=jnp.int32)
+
+    # per-component lexicographic best (w desc, row asc, col asc):
+    # sort rows by (label asc, w desc, row asc); first row per label wins.
+    # jnp.lexsort: LAST key is primary.
+    order = jnp.lexsort((rows, -row_w, labels))
+    lab_sorted = labels[order]
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), lab_sorted[1:] != lab_sorted[:-1]]
+    )
+    # winner row per component root: only first-per-label positions scatter
+    # (others are redirected to the out-of-range slot and dropped)
+    win_row = jnp.zeros((s,), jnp.int32).at[
+        jnp.where(first, lab_sorted, s)
+    ].set(order.astype(jnp.int32), mode="drop")
+
+    has_edge = row_j[win_row] >= 0
+    is_root = labels == rows
+    propose = jnp.logical_and(is_root, has_edge)
+
+    eu = jnp.where(propose, win_row, 0)
+    ev = jnp.where(propose, row_j[win_row], 0)
+    ew = jnp.where(propose, row_w[win_row], NEG)
+    target = labels[ev]  # component the edge lands in
+
+    # mutual dedupe: if target proposes back to us with the same undirected
+    # edge, keep only the lower root's copy.
+    root = rows
+    t_eu = eu[target]
+    t_ev = ev[target]
+    mutual_same = jnp.logical_and(t_eu == ev, t_ev == eu)
+    drop = jnp.logical_and(
+        jnp.logical_and(propose, propose[target]),
+        jnp.logical_and(mutual_same, root > target),
+    )
+    evalid = jnp.logical_and(propose, ~drop)
+
+    # merge: label propagation over the proposal edges (roots <-> targets)
+    new_labels = components_from_edges(s, root, target, propose)
+    # carry through to point level: every point takes its root's new label
+    new_point_labels = new_labels[labels]
+    return new_point_labels, eu, ev, ew, evalid
+
+
+def _rounds_for(s: int) -> int:
+    return max(1, math.ceil(math.log2(max(s, 2)))) + 1
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block"))
+def boruvka_mst(
+    xs: jax.Array, *, impl: str = "xla", block: int = 1024
+) -> MSTEdges:
+    """Max spanning forest of the cosine graph of xs (s, d) — single device.
+
+    O(log s) rounds of the fused sim+best-edge search; each round is one
+    matrix-free pass (peak memory O(s*d + block*s), never O(s^2)). The round
+    loop is a while_loop with an early exit once everything has merged into
+    one component, so typical inputs run well under the _rounds_for bound.
+    """
+    s = xs.shape[0]
+    xs = l2_normalize(xs)
+    rounds = _rounds_for(s)
+
+    def cond(state):
+        r, labels, *_ = state
+        # labels are min-id: a single component means everyone carries 0
+        return jnp.logical_and(r < rounds, ~jnp.all(labels == 0))
+
+    def body(state):
+        r, labels, eu, ev, ew, evalid = state
+        bj, bw = ops.sim_best_edge(
+            xs, xs, labels, labels, impl=impl, block=block
+        )
+        labels, u, v, w, valid = _merge_round(labels, bw, bj.astype(jnp.int32))
+        return (
+            r + 1,
+            labels,
+            eu.at[r].set(u),
+            ev.at[r].set(v),
+            ew.at[r].set(w),
+            evalid.at[r].set(valid),
+        )
+
+    init = (
+        jnp.int32(0),
+        jnp.arange(s, dtype=jnp.int32),
+        jnp.zeros((rounds, s), jnp.int32),
+        jnp.zeros((rounds, s), jnp.int32),
+        jnp.full((rounds, s), NEG, jnp.float32),
+        jnp.zeros((rounds, s), bool),
+    )
+    _, _, eu, ev, ew, evalid = jax.lax.while_loop(cond, body, init)
+    return MSTEdges(
+        u=eu.reshape(-1), v=ev.reshape(-1), w=ew.reshape(-1),
+        valid=evalid.reshape(-1),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n"))
+def cut_mst_edges(edges: MSTEdges, n: int, k: int) -> jax.Array:
+    """Single-link labels at k clusters from a masked MST edge set.
+
+    Keeps the n-k strongest valid edges (the k-1 weakest merges are undone),
+    then labels connected components — dense ids in [0, k).
+    """
+    neg = float(jnp.finfo(jnp.float32).min)
+    w = jnp.where(edges.valid, edges.w, neg)
+    order = jnp.argsort(-w)
+    rank = jnp.argsort(order)
+    keep = jnp.logical_and(edges.valid, rank < (n - k))
+    labels = components_from_edges(n, edges.u, edges.v, keep)
+    is_root = labels == jnp.arange(n, dtype=labels.dtype)
+    return (jnp.cumsum(is_root.astype(jnp.int32)) - 1)[labels]
+
+
+def single_link_labels_boruvka(
+    xs: jax.Array, k: int, *, impl: str = "xla"
+) -> jax.Array:
+    """Drop-in equivalent of single_link_labels, matrix-free Borůvka-style."""
+    edges = boruvka_mst(xs, impl=impl)
+    return cut_mst_edges(edges, xs.shape[0], k)

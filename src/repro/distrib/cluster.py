@@ -28,7 +28,7 @@ from jax.sharding import Mesh
 
 from repro.common import l2_normalize
 from repro.core.bkc import join_to_groups
-from repro.core.hac import single_link_labels
+from repro.core.hac import single_link_labels_boruvka
 from repro.core.microcluster import MicroClusters
 from repro.distrib.engine import make_job
 from repro.distrib.sharding import mesh_axis_size
@@ -280,9 +280,11 @@ def buckshot_distributed(
     """Buckshot: distributed sample -> single-link HAC -> 2-3 distributed
     K-Means iterations.
 
+    Both paths are matrix-free (no (s, s) similarity block on any device):
+
     hac = "replicated": phase 1 runs replicated on every device — the sample
       is s = sqrt(kn), tiny next to the collection, and replicating it avoids
-      a scatter/gather round-trip.
+      a scatter/gather round-trip. Same Borůvka rounds as core/buckshot.py.
     hac = "boruvka": phase 1's per-row edge search is sharded over the mesh
       (distrib/hac_parallel.py) — the paper's PARABLE partition+align, with an
       O(log s) round guarantee. Same labels, bit-for-bit."""
@@ -293,15 +295,14 @@ def buckshot_distributed(
         from repro.distrib.hac_parallel import single_link_labels_distributed
 
         labels = single_link_labels_distributed(mesh, axes, xs, k, impl=impl)
-        sums, counts = ops.cluster_stats(xs, labels, k, impl="xla")
+        sums, counts = ops.label_stats(xs, labels, k, impl=impl)
         init_centers = jnp.where(counts[:, None] > 0, l2_normalize(sums), 0.0)
     else:
 
         @jax.jit
         def phase1(xs):
-            sim = xs @ xs.T
-            labels = single_link_labels(sim, k)
-            sums, counts = ops.cluster_stats(xs, labels, k, impl="xla")
+            labels = single_link_labels_boruvka(xs, k, impl=impl)
+            sums, counts = ops.label_stats(xs, labels, k, impl=impl)
             return jnp.where(counts[:, None] > 0, l2_normalize(sums), 0.0)
 
         init_centers = phase1(xs)

@@ -5,176 +5,47 @@ dendrograms -> dendrogram alignment. For single-link, the dendrogram IS the
 maximum spanning tree, and 'local clustering + alignment' is exactly one
 Borůvka round: every component finds its best outgoing edge locally, and the
 merge step aligns them globally. Borůvka gives the same fixpoint with an
-O(log s) round guarantee, so that is the TPU-native form (DESIGN.md §2).
+O(log s) round guarantee, so that is the TPU-native form (DESIGN.md §2, §8).
+
+The single-device machinery (merge round, edge cut, matrix-free candidate
+search) lives in core/hac.py — this module only lifts the per-row edge search
+onto the mesh:
 
 Layout: the s sample documents are replicated (s = sqrt(kn) is tiny next to
 the collection); each device owns a ROW BLOCK of the (s, s) similarity matrix,
-computed on the fly from its rows — the full matrix never exists on any single
-device. Per round:
+which never exists anywhere — not even per shard: ops.sim_best_edge folds the
+MXU similarity tiles straight into a per-row (max, argmax). Per round:
 
-  map    : per-row best cross-component edge on the local block
-           (kernels.ops.best_edge — fused mask+rowmax+argmax)
+  map    : per-row best cross-component edge on the local rows
+           (kernels.ops.sim_best_edge — fused sim build+mask+rowmax+argmax)
   reduce : 'gather' of the per-shard candidates (the shuffle)
   merge  : per-component lexicographic best + mutual-edge dedupe + label
            propagation — O(s) replicated work (the paper's alignment step)
 
-Tie handling: edges are totally ordered by (weight desc, row asc, col asc),
-which makes each component's proposal unique, so the only duplicate proposals
-are mutual pairs (dropped on the higher root). With that total order Borůvka
-provably emits a max spanning FOREST of s-1 edges.
+The replicated sample is PADDED to a shard multiple (paper-default s rarely
+divides a 3-device mesh): pad rows carry label -1 and are sliced off after
+the gather; pad columns never exist because the broadcast side stays the
+unpadded (s, d) sample.
 """
 
 from __future__ import annotations
-
-import functools
-import math
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.common import l2_normalize
-from repro.core.hac import components_from_edges
+from repro.core.hac import (  # noqa: F401  (re-exported: historical home)
+    MSTEdges,
+    _merge_round,
+    _rounds_for,
+    boruvka_mst,
+    cut_mst_edges,
+    single_link_labels_boruvka,
+)
 from repro.distrib.engine import make_job
 from repro.distrib.sharding import mesh_axis_size
 from repro.kernels import ops
-
-NEG = float(jnp.finfo(jnp.float32).min)
-
-
-class MSTEdges(NamedTuple):
-    u: jax.Array  # (E,) int32 row endpoint (global point id)
-    v: jax.Array  # (E,) int32 col endpoint
-    w: jax.Array  # (E,) f32 similarity
-    valid: jax.Array  # (E,) bool — exactly s-1 True after a full run
-
-
-# --------------------------------------------------------------- merge step
-
-
-@functools.partial(jax.jit, static_argnames=())
-def _merge_round(
-    labels: jax.Array,  # (s,) current component labels (min-id)
-    row_w: jax.Array,  # (s,) best cross-edge weight per row (NEG if none)
-    row_j: jax.Array,  # (s,) best cross-edge col per row (-1 if none)
-) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
-    """One Borůvka alignment: per-component best edge, dedupe, merge.
-
-    Returns (new_labels, eu, ev, ew, evalid) with one slot per point id
-    (slot c used iff c is a component root that proposed an edge).
-    """
-    s = labels.shape[0]
-    rows = jnp.arange(s, dtype=jnp.int32)
-
-    # per-component lexicographic best (w desc, row asc, col asc):
-    # sort rows by (label asc, w desc, row asc); first row per label wins.
-    # jnp.lexsort: LAST key is primary.
-    order = jnp.lexsort((rows, -row_w, labels))
-    lab_sorted = labels[order]
-    first = jnp.concatenate(
-        [jnp.ones((1,), bool), lab_sorted[1:] != lab_sorted[:-1]]
-    )
-    # winner row per component root: only first-per-label positions scatter
-    # (others are redirected to the out-of-range slot and dropped)
-    win_row = jnp.zeros((s,), jnp.int32).at[
-        jnp.where(first, lab_sorted, s)
-    ].set(order.astype(jnp.int32), mode="drop")
-
-    has_edge = row_j[win_row] >= 0
-    is_root = labels == rows
-    propose = jnp.logical_and(is_root, has_edge)
-
-    eu = jnp.where(propose, win_row, 0)
-    ev = jnp.where(propose, row_j[win_row], 0)
-    ew = jnp.where(propose, row_w[win_row], NEG)
-    target = labels[ev]  # component the edge lands in
-
-    # mutual dedupe: if target proposes back to us with the same undirected
-    # edge, keep only the lower root's copy.
-    root = rows
-    t_eu = eu[target]
-    t_ev = ev[target]
-    mutual_same = jnp.logical_and(t_eu == ev, t_ev == eu)
-    drop = jnp.logical_and(
-        jnp.logical_and(propose, propose[target]),
-        jnp.logical_and(mutual_same, root > target),
-    )
-    evalid = jnp.logical_and(propose, ~drop)
-
-    # merge: label propagation over the proposal edges (roots <-> targets)
-    new_labels = components_from_edges(s, root, target, propose)
-    # carry through to point level: every point takes its root's new label
-    new_point_labels = new_labels[labels]
-    return new_point_labels, eu, ev, ew, evalid
-
-
-def _rounds_for(s: int) -> int:
-    return max(1, math.ceil(math.log2(max(s, 2)))) + 1
-
-
-# --------------------------------------------------------------- single dev
-
-
-@functools.partial(jax.jit, static_argnames=("impl",))
-def _row_candidates(
-    xs_rows: jax.Array, xs_all: jax.Array, labels_rows: jax.Array,
-    labels_all: jax.Array, *, impl: str = "xla",
-) -> tuple[jax.Array, jax.Array]:
-    """Best cross-component edge per local row; sim block built on the fly."""
-    sim = xs_rows @ xs_all.T
-    # self-similarity guard: a row's own column is same-component by labels
-    best_j, best_s = ops.best_edge(sim, labels_rows, labels_all, impl=impl)
-    return best_j.astype(jnp.int32), best_s
-
-
-def boruvka_mst(xs: jax.Array, *, impl: str = "xla") -> MSTEdges:
-    """Max spanning forest of the cosine graph of xs (s, d) — single device."""
-    s = xs.shape[0]
-    xs = l2_normalize(xs)
-    labels = jnp.arange(s, dtype=jnp.int32)
-    rounds = _rounds_for(s)
-    eus, evs, ews, evalids = [], [], [], []
-    for _ in range(rounds):
-        bj, bw = _row_candidates(xs, xs, labels, labels, impl=impl)
-        labels, eu, ev, ew, evalid = _merge_round(labels, bw, bj)
-        eus.append(eu)
-        evs.append(ev)
-        ews.append(ew)
-        evalids.append(evalid)
-    return MSTEdges(
-        u=jnp.concatenate(eus),
-        v=jnp.concatenate(evs),
-        w=jnp.concatenate(ews),
-        valid=jnp.concatenate(evalids),
-    )
-
-
-@functools.partial(jax.jit, static_argnames=("k", "n"))
-def cut_mst_edges(edges: MSTEdges, n: int, k: int) -> jax.Array:
-    """Single-link labels at k clusters from a masked MST edge set.
-
-    Keeps the n-k strongest valid edges (the k-1 weakest merges are undone),
-    then labels connected components — dense ids in [0, k).
-    """
-    w = jnp.where(edges.valid, edges.w, NEG)
-    order = jnp.argsort(-w)
-    rank = jnp.argsort(order)
-    keep = jnp.logical_and(edges.valid, rank < (n - k))
-    labels = components_from_edges(n, edges.u, edges.v, keep)
-    is_root = labels == jnp.arange(n, dtype=labels.dtype)
-    return (jnp.cumsum(is_root.astype(jnp.int32)) - 1)[labels]
-
-
-def single_link_labels_boruvka(
-    xs: jax.Array, k: int, *, impl: str = "xla"
-) -> jax.Array:
-    """Drop-in equivalent of core.hac.single_link_labels, Borůvka-style."""
-    edges = boruvka_mst(xs, impl=impl)
-    return cut_mst_edges(edges, xs.shape[0], k)
-
-
-# --------------------------------------------------------------- distributed
 
 
 def boruvka_mst_distributed(
@@ -186,44 +57,49 @@ def boruvka_mst_distributed(
 ) -> MSTEdges:
     """Borůvka MST with the per-row edge search sharded over the mesh.
 
-    xs (s, d) replicated; each shard owns s/P rows of the similarity matrix
-    (computed on the fly — the (s, s) matrix never materializes per device).
-    The merge step runs replicated (O(s) work on (s,)-sized arrays).
+    xs (s, d) replicated; each shard owns ~s/P rows of the edge search
+    (matrix-free — no (s, s) block exists on any device). The merge step runs
+    replicated (O(s) work on (s,)-sized arrays). Rounds are host-chained like
+    the paper's job driver, with an early exit once fully merged.
     """
-    s = xs.shape[0]
+    s, d = xs.shape
     xs = l2_normalize(xs)
     n_shards = mesh_axis_size(mesh, axes)
-    assert s % n_shards == 0, f"sample size {s} must divide {n_shards} shards"
-    rows_per = s // n_shards
+    pad = (-s) % n_shards
+    xs_p = (
+        jnp.concatenate([xs, jnp.zeros((pad, d), xs.dtype)]) if pad else xs
+    )
 
     def cand_map(data, bcast):
-        rows, row_labels = data["rows"], data["labels"]
-        all_x, all_labels = bcast["xs"], bcast["all_labels"]
-        me = jax.lax.axis_index(axes)
-        bj, bw = _row_candidates(rows, all_x, row_labels, all_labels, impl=impl)
-        del me
-        return {"j": bj, "w": bw}
+        bj, bw = ops.sim_best_edge(
+            data["rows"], bcast["xs"], data["labels"], bcast["all_labels"],
+            impl=impl,
+        )
+        return {"j": bj.astype(jnp.int32), "w": bw}
 
     job = make_job(
         mesh, axes, cand_map, {"j": "shard", "w": "shard"}, name="boruvka_cand"
     )
 
     labels = jnp.arange(s, dtype=jnp.int32)
+    pad_labels = jnp.full((pad,), -1, jnp.int32)
     rounds = _rounds_for(s)
     eus, evs, ews, evalids = [], [], [], []
     for _ in range(rounds):
+        labels_p = jnp.concatenate([labels, pad_labels]) if pad else labels
         out = job(
-            {"rows": xs, "labels": labels},
+            {"rows": xs_p, "labels": labels_p},
             {"xs": xs, "all_labels": labels},
         )
-        bj = jnp.asarray(out["j"])  # (s,) sharded -> implicit gather on host use
-        bw = jnp.asarray(out["w"])
+        bj = jnp.asarray(out["j"])[:s]  # gather + drop pad-row candidates
+        bw = jnp.asarray(out["w"])[:s]
         labels, eu, ev, ew, evalid = _merge_round(labels, bw, bj)
         eus.append(eu)
         evs.append(ev)
         ews.append(ew)
         evalids.append(evalid)
-    del rows_per
+        if bool(jnp.all(labels == 0)):  # single component: forest complete
+            break
     return MSTEdges(
         u=jnp.concatenate(eus),
         v=jnp.concatenate(evs),

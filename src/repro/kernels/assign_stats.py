@@ -16,10 +16,20 @@ Grid: (n_tiles, k_tiles), k innermost.
   * idx/sim blocks are indexed by the n tile only -> resident across the k
     sweep (revisiting idiom).
   * sums/counts/min_sim/sumsq blocks have CONSTANT index maps -> resident in
-    VMEM for the entire grid and written back once at the end. This bounds
-    k*d: the (kp, d) f32 sums accumulator must fit VMEM alongside one x tile
-    and one center tile (~2 MiB each at d=2048) — fine for the paper's
-    k <= ~1k, d = 2048 regime (see DESIGN.md §6).
+    VMEM for the entire grid and written back once at the end.
+
+d tiling (DESIGN.md §8): the (kp, d) f32 sums accumulator is capped at
+ACC_BUDGET bytes of VMEM. When k*d fits (the paper's k <= ~1k, d = 2048
+regime) the kernel is exactly the single-tile design above. Beyond the
+budget, the wrapper narrows the in-kernel accumulator to the first BD_SUMS
+feature columns (everything else — idx, best_sim, counts, min_sim, sumsq —
+still comes from the single fused pass, which needs the full-d x tile for
+the assignment matmul anyway) and builds the remaining sums columns with the
+d-tiled ``label_stats`` kernel below, which streams (kp, BD) accumulator
+blocks with an n-innermost grid. That tail re-reads n*(d - BD_SUMS) bytes of
+x; the alternative — spilling the accumulator itself to HBM between n tiles
+— would move 2 * n_tiles * k * d bytes, strictly worse whenever k > BN,
+which is exactly the regime that busts the budget.
 
 Row weights: the wrapper always materializes a (n, 1) f32 weight column
 (ones when the caller passes none; zeros for rows it pads in). Inside the
@@ -46,6 +56,11 @@ from jax.experimental import pallas as pl
 # Shared with the standalone assign kernel: same tiling, same tie semantics.
 from repro.kernels.assign_argmax import BK, BN, NEG, _pad_to
 from repro.kernels.ref import BIG
+
+BD = 512  # feature columns per label_stats accumulator tile
+# VMEM cap for the fused kernel's resident (kp, d) f32 sums accumulator; the
+# old implicit ceiling was one tile of k~1k x d=2048 (8 MiB, DESIGN.md §6).
+ACC_BUDGET = 8 * 1024 * 1024
 
 
 def _kernel(
@@ -119,8 +134,8 @@ def _kernel(
         xf = x.astype(jnp.float32)
         sums_ref[...] += jax.lax.dot_general(
             hot_w,
-            xf,
-            (((1,), (0,)), ((), ())),  # (kp, BN) @ (BN, d)
+            xf[:, : sums_ref.shape[1]],  # accumulator may cover a d prefix
+            (((1,), (0,)), ((), ())),  # (kp, BN) @ (BN, bd_sums)
             preferred_element_type=jnp.float32,
         )
         counts_ref[...] += jnp.sum(hot_w, axis=1, keepdims=True)
@@ -134,7 +149,7 @@ def _kernel(
         )
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "bn", "bk"))
+@functools.partial(jax.jit, static_argnames=("interpret", "bn", "bk", "bd"))
 def assign_stats_pallas(
     x: jax.Array,
     centers: jax.Array,
@@ -143,10 +158,14 @@ def assign_stats_pallas(
     interpret: bool = False,
     bn: int = BN,
     bk: int = BK,
+    bd: int | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """(n, d), (k, d)[, (n,)] -> (idx, best_sim, sums, counts, min_sim, sumsq).
 
-    Contract identical to ref.assign_stats; single HBM read of x.
+    Contract identical to ref.assign_stats; single HBM read of x while the
+    (kp, d) accumulator fits ACC_BUDGET. Beyond that the sums tail streams
+    through the d-tiled label_stats kernel (see module docstring). ``bd``
+    overrides the in-kernel accumulator width (tests force the split path).
     """
     n, d = x.shape
     k = centers.shape[0]
@@ -163,6 +182,10 @@ def assign_stats_pallas(
     kp = k + ((-k) % 8)  # sublane-align the accumulator bin dimension
     grid = (np_ // bn, kp_c // bk)
 
+    if bd is None:
+        bd = ACC_BUDGET // (kp * 4)
+    bd_sums = min(dp, max(dmult, (bd // dmult) * dmult))
+
     idx, sim, sums, counts, min_sim, sumsq = pl.pallas_call(
         functools.partial(_kernel, k_real=k, bk=bk, nk=grid[1]),
         grid=grid,
@@ -174,7 +197,7 @@ def assign_stats_pallas(
         out_specs=[
             pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((kp, dp), lambda i, j: (0, 0)),
+            pl.BlockSpec((kp, bd_sums), lambda i, j: (0, 0)),
             pl.BlockSpec((kp, 1), lambda i, j: (0, 0)),
             pl.BlockSpec((kp, 1), lambda i, j: (0, 0)),
             pl.BlockSpec((kp, 1), lambda i, j: (0, 0)),
@@ -182,18 +205,118 @@ def assign_stats_pallas(
         out_shape=[
             jax.ShapeDtypeStruct((np_, 1), jnp.int32),
             jax.ShapeDtypeStruct((np_, 1), jnp.float32),
-            jax.ShapeDtypeStruct((kp, dp), jnp.float32),
+            jax.ShapeDtypeStruct((kp, bd_sums), jnp.float32),
             jax.ShapeDtypeStruct((kp, 1), jnp.float32),
             jax.ShapeDtypeStruct((kp, 1), jnp.float32),
             jax.ShapeDtypeStruct((kp, 1), jnp.float32),
         ],
         interpret=interpret,
     )(xp, cp, wp)
+    idx_n = idx[:n, 0]
+    if bd_sums < d:
+        tail, _ = label_stats_pallas(
+            x[:, bd_sums:], idx_n, k, wv, interpret=interpret, bn=bn
+        )
+        full_sums = jnp.concatenate([sums[:k, :bd_sums], tail], axis=1)
+    else:
+        full_sums = sums[:k, :d]
     return (
-        idx[:n, 0],
+        idx_n,
         sim[:n, 0],
-        sums[:k, :d],
+        full_sums,
         counts[:k, 0],
         min_sim[:k, 0],
         sumsq[:k, 0],
     )
+
+
+# ------------------------------------------------------------- label stats
+
+
+def _label_stats_kernel(idx_ref, w_ref, x_ref, sums_ref, counts_ref):
+    i = pl.program_id(0)  # d tile
+    j = pl.program_id(1)  # n tile (innermost)
+
+    @pl.when(j == 0)
+    def _init_sums():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _init_counts():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    idx = idx_ref[...]  # (BN, 1) int32
+    wv = w_ref[...]  # (BN, 1) f32 (0 for padding / excluded rows)
+    x = x_ref[...]  # (BN, BD)
+    kp = sums_ref.shape[0]
+
+    bins = jax.lax.broadcasted_iota(jnp.int32, (kp, idx.shape[0]), 0)
+    hot = bins == idx[:, 0][None, :]  # oob labels (e.g. -1) match no bin
+    hot_w = jnp.where(hot, wv[:, 0][None, :], 0.0).astype(jnp.float32)
+
+    sums_ref[...] += jax.lax.dot_general(
+        hot_w,
+        x.astype(jnp.float32),
+        (((1,), (0,)), ((), ())),  # (kp, BN) @ (BN, BD)
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(i == 0)
+    def _counts():
+        counts_ref[...] += jnp.sum(hot_w, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret", "bn", "bd"))
+def label_stats_pallas(
+    x: jax.Array,
+    idx: jax.Array,
+    k: int,
+    w: jax.Array | None = None,
+    *,
+    interpret: bool = False,
+    bn: int = BN,
+    bd: int = BD,
+) -> tuple[jax.Array, jax.Array]:
+    """(n, d), (n,)[, (n,)] -> ((k, d) weighted sums, (k,) weight totals).
+
+    The d-tiled accumulator grid: (d_tiles, n_tiles), n innermost, so each
+    (kp, BD) sums block stays VMEM-resident for one full document sweep and
+    k*d is bounded per-tile, not in total. Weights subsume row-padding
+    masking (padded rows carry weight 0); out-of-range labels fall into no
+    bin, matching ref.label_stats.
+    """
+    n, d = x.shape
+    bn = min(bn, max(8, n))
+    kp = k + ((-k) % 8)  # sublane-align the bin dimension
+    dmult = 128 if d >= 128 else 8
+
+    wv = jnp.ones((n,), jnp.float32) if w is None else w.astype(jnp.float32)
+    xp = _pad_to(_pad_to(x, 0, bn), 1, dmult)  # lane-align d like the siblings
+    # block width: lane-aligned, inside the VMEM budget, at most the padded d
+    bd_cap = max(dmult, (ACC_BUDGET // (kp * 4) // dmult) * dmult)
+    bd = min(max(dmult, (bd // dmult) * dmult), bd_cap, xp.shape[1])
+    xp = _pad_to(xp, 1, bd)  # grid-divisible; zero columns contribute nothing
+    idxp = _pad_to(idx.astype(jnp.int32)[:, None] + 1, 0, bn) - 1  # pad -> -1
+    wp = _pad_to(wv[:, None], 0, bn)
+    np_, dp = xp.shape
+    grid = (dp // bd, np_ // bn)
+
+    sums, counts = pl.pallas_call(
+        _label_stats_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, bd), lambda i, j: (j, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((kp, bd), lambda i, j: (0, i)),
+            pl.BlockSpec((kp, 1), lambda i, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((kp, dp), jnp.float32),
+            jax.ShapeDtypeStruct((kp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idxp, wp, xp)
+    return sums[:k, :d], counts[:k, 0]

@@ -160,6 +160,36 @@ def assign_stats_chunked(
     )
 
 
+# ---------------------------------------------------------------- label stats
+
+
+@functools.partial(jax.jit, static_argnames=("k", "impl"))
+def label_stats(
+    x: jax.Array,
+    idx: jax.Array,
+    k: int,
+    w: jax.Array | None = None,
+    *,
+    impl: str = "auto",
+) -> tuple[jax.Array, jax.Array]:
+    """(n,d),(n,)[,(n,)] -> ((k,d) weighted sums, (k,) weight totals).
+
+    The labels-are-given combiner (Buckshot phase 1: HAC hands over labels, so
+    there is no argmax to fuse — only the accumulator build). Out-of-range
+    labels (e.g. -1 padding) and weight-0 rows contribute nothing. The Pallas
+    path runs the same d-tiled accumulator grid the fused assign_stats kernel
+    spills into, so k*d beyond one VMEM tile streams in (k, BD) blocks.
+    """
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.label_stats_scatter(x, idx, k, w)
+    from repro.kernels import assign_stats as kmod
+
+    return kmod.label_stats_pallas(
+        x, idx, k, w, interpret=impl == "pallas_interpret"
+    )
+
+
 # ---------------------------------------------------------------- best edge
 
 
@@ -180,6 +210,56 @@ def best_edge(
     return kmod.best_edge_pallas(
         sim, labels_row, labels_col, interpret=impl == "pallas_interpret"
     )
+
+
+# ---------------------------------------------------------------- fused sim+edge
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block"))
+def sim_best_edge(
+    xs_rows: jax.Array,
+    xs_all: jax.Array,
+    labels_row: jax.Array,
+    labels_col: jax.Array,
+    *,
+    impl: str = "auto",
+    block: int = 1024,
+) -> tuple[jax.Array, jax.Array]:
+    """Matrix-free per-row best cross-component edge — sim build fused in.
+
+    The single-pass replacement for ``xs_rows @ xs_all.T`` followed by
+    ``best_edge``: the (r, c) similarity matrix never reaches HBM. The Pallas
+    kernel folds MXU sim tiles into a VMEM-resident (max, argmax); the XLA
+    fallback scans (block, c) row chunks, so peak memory is O(block * c)
+    instead of O(r * c). Chunking is bit-transparent: every row's candidate
+    search is independent, so chunked == one-shot exactly.
+    """
+    impl = _resolve(impl)
+    if impl != "xla":
+        from repro.kernels import sim_best_edge as kmod
+
+        return kmod.sim_best_edge_pallas(
+            xs_rows, xs_all, labels_row, labels_col,
+            interpret=impl == "pallas_interpret",
+        )
+    r, d = xs_rows.shape
+    if r <= block:
+        return ref.sim_best_edge(xs_rows, xs_all, labels_row, labels_col)
+    pad = (-r) % block
+    xr = xs_rows
+    lr = labels_row.astype(jnp.int32)
+    if pad:
+        xr = jnp.concatenate([xr, jnp.zeros((pad, d), xr.dtype)])
+        lr = jnp.concatenate([lr, jnp.full((pad,), -1, jnp.int32)])
+    xb = xr.reshape(-1, block, d)
+    lb = lr.reshape(-1, block)
+
+    def body(_, blk):
+        bj, bs = ref.sim_best_edge(blk["x"], xs_all, blk["l"], labels_col)
+        return None, (bj, bs)
+
+    _, (js, ss) = jax.lax.scan(body, None, {"x": xb, "l": lb})
+    return js.reshape(-1)[:r], ss.reshape(-1)[:r]
 
 
 # ---------------------------------------------------------------- flash decode

@@ -129,6 +129,53 @@ def assign_stats_scatter(
     return idx, best_sim, sums, counts, min_sim, sumsq
 
 
+def label_stats(
+    x: jax.Array, idx: jax.Array, k: int, w: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Weighted combiner oracle: per-label sums and weight totals.
+
+    The labels-are-given sibling of ``assign_stats`` (HAC hands Buckshot
+    phase 1 its labels directly, so there is no argmax to fuse with — only the
+    accumulator machinery). Out-of-range labels (e.g. -1 padding) fall into no
+    bin; weight-0 rows contribute nothing.
+
+    Args:
+      x: (n, d) document vectors.
+      idx: (n,) int32 labels; rows with idx outside [0, k) are dropped.
+      k: number of bins.
+      w: optional (n,) row weights.
+
+    Returns:
+      sums: (k, d) f32 per-label weighted vector sums.
+      counts: (k,) f32 per-label weight totals.
+    """
+    one_hot = jax.nn.one_hot(idx, k, dtype=jnp.float32)  # (n, k); oob -> 0 row
+    if w is not None:
+        one_hot = one_hot * w.astype(jnp.float32)[:, None]
+    sums = jnp.einsum("nk,nd->kd", one_hot, x, preferred_element_type=jnp.float32)
+    counts = jnp.sum(one_hot, axis=0)
+    return sums, counts
+
+
+def label_stats_scatter(
+    x: jax.Array, idx: jax.Array, k: int, w: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Production XLA path for label_stats: segment reductions, O(n*d) adds.
+
+    Same contract as ``label_stats``; out-of-range labels are dropped by the
+    segment ops. Matches the oracle up to f32 summation order.
+    """
+    xf = x.astype(jnp.float32)
+    if w is not None:
+        wf = w.astype(jnp.float32)
+        xf = xf * wf[:, None]
+    else:
+        wf = jnp.ones((x.shape[0],), jnp.float32)
+    sums = jax.ops.segment_sum(xf, idx, num_segments=k)
+    counts = jax.ops.segment_sum(wf, idx, num_segments=k)
+    return sums, counts
+
+
 def best_edge(
     sim: jax.Array, labels_row: jax.Array, labels_col: jax.Array
 ) -> tuple[jax.Array, jax.Array]:
@@ -151,6 +198,39 @@ def best_edge(
     best_s = jnp.max(masked, axis=1)
     best_j = jnp.where(best_s == neg, -1, best_j)
     return best_j, best_s
+
+
+def sim_best_edge(
+    xs_rows: jax.Array,
+    xs_all: jax.Array,
+    labels_row: jax.Array,
+    labels_col: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Matrix-free best-edge oracle: similarity build + masked row-max fused.
+
+    Semantically ``best_edge(xs_rows @ xs_all.T, ...)`` — the oracle DOES
+    materialize the (r, c) similarity block (it is the ground truth at test
+    sizes); the Pallas kernel and the chunked XLA path compute the same thing
+    without ever holding more than one tile / row block of it.
+
+    Args:
+      xs_rows: (r, d) row vectors (callers pass unit-norm rows for cosine).
+      xs_all: (c, d) column vectors.
+      labels_row: (r,) component label of each row point.
+      labels_col: (c,) component label of each column point.
+
+    Returns:
+      best_j: (r,) int32 most similar column in a DIFFERENT component
+        (ties -> lowest index; -1 if none).
+      best_s: (r,) f32 similarity of that edge (f32.min if none).
+    """
+    sim = jax.lax.dot_general(
+        xs_rows,
+        xs_all,
+        (((1,), (1,)), ((), ())),  # contract on d — same form as the kernel
+        preferred_element_type=jnp.float32,
+    )
+    return best_edge(sim, labels_row, labels_col)
 
 
 def flash_decode(

@@ -1,0 +1,126 @@
+"""Fused similarity+best-edge Pallas TPU kernel — matrix-free Borůvka step.
+
+The Buckshot phase-1 bottleneck was never the HAC bookkeeping, it was the
+(s, s) sample similarity matrix: `best_edge` consumed a sim block that some
+caller first had to materialize in HBM (2 GB f32 at the paper's n = 1M /
+k = 500 regime). This kernel folds the similarity build INTO the edge search:
+each grid step does one (BR, d) x (BC, d) MXU matmul into VMEM, masks
+same-component and padded columns, and folds the tile into a running
+(max, argmax) pair living in the revisited output block. The (BR, BC) sim
+tile dies in VMEM — phase 1 peak memory drops from O(s^2) to
+O(s*d + BR*BC).
+
+Grid: (r_tiles, c_tiles), c innermost; output blocks are indexed by the row
+tile only, so they stay VMEM-resident across the column sweep (the same
+revisiting idiom as assign_argmax.py — a Borůvka candidate search IS an
+assign_argmax with a component mask).
+
+Tie semantics match ref.sim_best_edge (== ref.best_edge on the full product):
+lowest column index wins (strict > across tiles, first-argmax within a tile);
+rows with no cross-component column get (-1, f32.min).
+
+bf16: row/column blocks may be bf16 — the MXU matmul accumulates f32
+(``preferred_element_type``), halving the HBM read of the sample.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.assign_argmax import _pad_to
+
+NEG = float(jnp.finfo(jnp.float32).min)
+
+BR = 256  # row points per tile (8-sublane multiple)
+BC = 256  # column points per tile (lane-width multiple)
+
+
+def _kernel(xr_ref, xc_ref, lr_ref, lc_ref, j_ref, s_ref, *, c_real: int, bc: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        j_ref[...] = jnp.full_like(j_ref, -1)
+        s_ref[...] = jnp.full_like(s_ref, NEG)
+
+    xr = xr_ref[...]  # (BR, d) — full contraction dim, resident for the c sweep
+    xc = xc_ref[...]  # (BC, d)
+    sims = jax.lax.dot_general(
+        xr,
+        xc,
+        (((1,), (1,)), ((), ())),  # contract on d: (BR, d) x (BC, d) -> (BR, BC)
+        preferred_element_type=jnp.float32,
+    )
+    lr = lr_ref[...]  # (BR, 1) int32
+    lc = lc_ref[...]  # (1, BC) int32
+
+    col = j * bc + jax.lax.broadcasted_iota(jnp.int32, sims.shape, 1)
+    keep = jnp.logical_and(lr != lc, col < c_real)  # cross-component & unpadded
+    masked = jnp.where(keep, sims, NEG)
+
+    local_s = jnp.max(masked, axis=1, keepdims=True)
+    local_j = jnp.argmax(masked, axis=1).astype(jnp.int32)[:, None] + j * bc
+
+    best_s = s_ref[...]
+    better = local_s > best_s  # strict: earlier tiles win ties
+    s_ref[...] = jnp.where(better, local_s, best_s)
+    j_ref[...] = jnp.where(better, local_j, j_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "br", "bc"))
+def sim_best_edge_pallas(
+    xs_rows: jax.Array,
+    xs_all: jax.Array,
+    labels_row: jax.Array,
+    labels_col: jax.Array,
+    *,
+    interpret: bool = False,
+    br: int = BR,
+    bc: int = BC,
+) -> tuple[jax.Array, jax.Array]:
+    """(r, d), (c, d), (r,), (c,) -> ((r,) best col, (r,) best sim).
+
+    Contract identical to ref.sim_best_edge; the (r, c) similarity matrix
+    never exists in HBM.
+    """
+    r, d = xs_rows.shape
+    c = xs_all.shape[0]
+    br = min(br, max(8, r))
+    bc = min(bc, max(8, c))
+    dmult = 128 if d >= 128 else 8
+
+    xr = _pad_to(_pad_to(xs_rows, 0, br), 1, dmult)
+    xc = _pad_to(_pad_to(xs_all, 0, bc), 1, dmult)
+    lr = _pad_to(labels_row.astype(jnp.int32)[:, None], 0, br)
+    # padded col labels are irrelevant: cols >= c are masked by c_real
+    lc = _pad_to(labels_col.astype(jnp.int32)[None, :], 1, bc)
+    rp, dp = xr.shape
+    cp = xc.shape[0]
+    grid = (rp // br, cp // bc)
+
+    best_j, best_s = pl.pallas_call(
+        functools.partial(_kernel, c_real=c, bc=bc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, dp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bc, dp), lambda i, j: (j, 0)),
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bc), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((rp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xr, xc, lr, lc)
+    out_j = best_j[:r, 0]
+    out_s = best_s[:r, 0]
+    return jnp.where(out_s == NEG, -1, out_j), out_s

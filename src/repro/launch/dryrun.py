@@ -173,7 +173,7 @@ def run_cluster_cell(shape: str, multi_pod: bool, out_dir: str | None) -> dict:
 
     from repro.distrib import cluster as dc
     from repro.distrib.engine import make_job
-    from repro.distrib.hac_parallel import _row_candidates
+    from repro.kernels import ops
     from repro.launch.mesh import make_production_mesh, policy_for
 
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -220,10 +220,11 @@ def run_cluster_cell(shape: str, multi_pod: bool, out_dir: str | None) -> dict:
         lowered = job.lower(data, bcast)
         mf = 4.0 * CLUSTER_N * CLUSTER_D * CLUSTER_BIGK
     elif shape == "boruvka_round":
-        # one sharded Borůvka candidate round on the Buckshot sample
+        # one sharded Borůvka candidate round on the Buckshot sample —
+        # matrix-free: the fused sim+best-edge op, no (s, s) block per shard
         def cand_map(data, bcast):
             return dict(
-                zip(("j", "w"), _row_candidates(
+                zip(("j", "w"), ops.sim_best_edge(
                     data["rows"], bcast["xs"], data["labels"],
                     bcast["all_labels"], impl="xla",
                 ))

@@ -41,6 +41,8 @@ from repro.core.kmeans import init_random_centers
 from repro.core.microcluster import build_microclusters, merge_stats, pair_similarity
 from repro.core.bkc import join_to_groups
 from repro.core import sampling
+# imported via distrib.hac_parallel on purpose: the machinery moved to
+# core.hac and this validates the backward-compat re-export
 from repro.distrib.hac_parallel import boruvka_mst, single_link_labels_boruvka
 
 KEY = jax.random.PRNGKey(0)
@@ -205,6 +207,28 @@ def test_buckshot_sample_is_subset(blob_data):
     assert idx.min() >= 0 and idx.max() < x.shape[0]
 
 
+def test_buckshot_hac_switch_boruvka_equals_prim(blob_data):
+    """Default matrix-free phase 1 == the dense Prim oracle path: same sample
+    labels, same initial centers, same final result."""
+    from repro.core import buckshot_fit, buckshot_phase1
+    from repro.core.sampling import sample_indices
+
+    x, _, k = blob_data
+    sidx = sample_indices(KEY, x.shape[0], 200)
+    lb, cb = buckshot_phase1(x, sidx, k)  # default hac="boruvka"
+    lp, cp = buckshot_phase1(x, sidx, k, hac="prim")
+    np.testing.assert_array_equal(np.asarray(lb), np.asarray(lp))
+    np.testing.assert_allclose(np.asarray(cb), np.asarray(cp), rtol=1e-5,
+                               atol=1e-6)
+    rb = buckshot_fit(x, sidx, k, hac="boruvka")
+    rp = buckshot_fit(x, sidx, k, hac="prim")
+    np.testing.assert_allclose(
+        float(rb.kmeans.rss), float(rp.kmeans.rss), rtol=1e-5
+    )
+    with pytest.raises(ValueError):
+        buckshot_phase1(x, sidx, k, hac="nope")
+
+
 # ------------------------------------------------------------------ HAC
 
 
@@ -282,12 +306,26 @@ def test_mst_prim_total_weight_is_max(rng):
         assert w_prim >= w - 1e-5
 
 
-@pytest.mark.parametrize("s,k", [(64, 5), (200, 12), (150, 1)])
+@pytest.mark.parametrize("s,k", [(64, 5), (200, 12), (150, 1), (512, 20),
+                                 (700, 3)])
 def test_boruvka_equals_prim(rng, s, k):
+    """Matrix-free Borůvka == dense Prim labels at growing s."""
     xs = l2_normalize(jnp.asarray(rng.normal(size=(s, 24)).astype(np.float32)))
     ref_labels = np.asarray(single_link_labels(xs @ xs.T, k))
     got = np.asarray(single_link_labels_boruvka(xs, k))
     assert (ref_labels == got).all()
+
+
+def test_boruvka_row_chunking_is_transparent(rng):
+    """The chunked candidate sweep (block < s) must not change the forest."""
+    from repro.core.hac import boruvka_mst as core_boruvka, cut_mst_edges
+
+    s, k = 512, 9
+    xs = l2_normalize(jnp.asarray(rng.normal(size=(s, 16)).astype(np.float32)))
+    want = np.asarray(single_link_labels(xs @ xs.T, k))
+    edges = core_boruvka(xs, block=100)  # forces the scan path, non-divisible
+    got = np.asarray(cut_mst_edges(edges, s, k))
+    assert (want == got).all()
 
 
 def test_boruvka_emits_spanning_forest(rng):

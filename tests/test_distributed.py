@@ -106,6 +106,30 @@ def test_distributed_boruvka_matches_prim():
     """)
 
 
+def test_distributed_boruvka_non_divisible_sample():
+    """Paper-default s rarely divides the mesh: the replicated sample is
+    padded to a shard multiple and the pad rows must not change the labels."""
+    _run("""
+    import numpy as np, jax.numpy as jnp
+    from repro.common import l2_normalize
+    from repro.core.hac import single_link_labels
+    from repro.distrib.hac_parallel import single_link_labels_distributed
+    from repro.distrib.sharding import make_flat_mesh
+
+    rng = np.random.default_rng(11)
+    for n_dev, s, k in ((8, 321, 7), (3, 1000, 10), (8, 9, 3)):
+        mesh = make_flat_mesh(n_dev)
+        assert s % n_dev != 0
+        xs = l2_normalize(jnp.asarray(
+            rng.normal(size=(s, 16)).astype(np.float32)))
+        ref = np.asarray(single_link_labels(xs @ xs.T, k))
+        got = np.asarray(
+            single_link_labels_distributed(mesh, ("data",), xs, k))
+        assert (ref == got).all(), (n_dev, s, k)
+    print("BORUVKA PAD OK")
+    """)
+
+
 def test_compressed_psum_close_to_exact():
     _run("""
     import jax, jax.numpy as jnp, numpy as np

@@ -18,10 +18,15 @@ except ImportError:  # offline container: skip property-based tests only
 
 from repro.kernels import ops, ref
 from repro.kernels.assign_argmax import assign_argmax_pallas
-from repro.kernels.assign_stats import assign_stats_pallas
+from repro.kernels.assign_stats import (
+    ACC_BUDGET,
+    assign_stats_pallas,
+    label_stats_pallas,
+)
 from repro.kernels.best_edge import best_edge_pallas
 from repro.kernels.cluster_stats import cluster_stats_pallas
 from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.sim_best_edge import sim_best_edge_pallas
 
 DTYPES = [jnp.float32, jnp.bfloat16]
 
@@ -238,6 +243,177 @@ def test_best_edge_all_same_component(rng):
     assert (np.asarray(ps) == float(jnp.finfo(jnp.float32).min)).all()
 
 
+# ------------------------------------------------------------ sim_best_edge
+
+
+@pytest.mark.parametrize("r,c,labels", [(6, 6, 2), (90, 121, 5), (256, 256, 9),
+                                        (33, 257, 4), (300, 70, 3)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sim_best_edge_sweep(rng, r, c, labels, dtype):
+    """Fused sim+edge kernel vs oracle, including non-divisible tile shapes."""
+    xr = _rand(rng, (r, 40), dtype)
+    xc = _rand(rng, (c, 40), dtype)
+    lr = jnp.asarray(rng.integers(0, labels, size=r).astype(np.int32))
+    lc = jnp.asarray(rng.integers(0, labels, size=c).astype(np.int32))
+    rj, rs_ = ref.sim_best_edge(xr, xc, lr, lc)
+    pj, ps = sim_best_edge_pallas(xr, xc, lr, lc, interpret=True)
+    np.testing.assert_array_equal(np.asarray(rj), np.asarray(pj))
+    np.testing.assert_allclose(np.asarray(rs_), np.asarray(ps), rtol=2e-2, atol=2e-2)
+
+
+def test_sim_best_edge_exact_integer_data(rng):
+    """Integer-valued f32 inputs: similarities are exactly representable, so
+    the kernel, the oracle, and the chunked XLA path must agree bit-for-bit."""
+    xr = jnp.asarray(rng.integers(-6, 7, size=(130, 48)).astype(np.float32))
+    xc = jnp.asarray(rng.integers(-6, 7, size=(97, 48)).astype(np.float32))
+    lr = jnp.asarray(rng.integers(0, 5, size=130).astype(np.int32))
+    lc = jnp.asarray(rng.integers(0, 5, size=97).astype(np.int32))
+    rj, rs_ = ref.sim_best_edge(xr, xc, lr, lc)
+    pj, ps = sim_best_edge_pallas(xr, xc, lr, lc, interpret=True)
+    np.testing.assert_array_equal(np.asarray(rj), np.asarray(pj))
+    np.testing.assert_array_equal(np.asarray(rs_), np.asarray(ps))
+    for block in (32, 50):  # divides r / does not divide r
+        cj, cs = ops.sim_best_edge(xr, xc, lr, lc, impl="xla", block=block)
+        np.testing.assert_array_equal(np.asarray(rj), np.asarray(cj))
+        np.testing.assert_array_equal(np.asarray(rs_), np.asarray(cs))
+
+
+def test_sim_best_edge_tie_across_tiles(rng):
+    """A duplicate best column in tile 0 and tile 1 (bc=8): lowest col wins,
+    in the kernel and in the chunked XLA path alike."""
+    xc = _rand(rng, (20, 16), jnp.float32)
+    xc = xc.at[13].set(xc[2])
+    xr = xc[2][None, :] * jnp.ones((5, 1))
+    lr = jnp.zeros((5,), jnp.int32)
+    lc = jnp.ones((20,), jnp.int32)  # all cols cross-component
+    pj, _ = sim_best_edge_pallas(xr, xc, lr, lc, interpret=True, bc=8)
+    assert (np.asarray(pj) == 2).all()
+    cj, _ = ops.sim_best_edge(xr, xc, lr, lc, impl="xla", block=2)
+    assert (np.asarray(cj) == 2).all()
+
+
+def test_sim_best_edge_all_same_component(rng):
+    xs = _rand(rng, (12, 8), jnp.float32)
+    lab = jnp.zeros((12,), jnp.int32)
+    pj, ps = sim_best_edge_pallas(xs, xs, lab, lab, interpret=True)
+    assert (np.asarray(pj) == -1).all()
+    assert (np.asarray(ps) == float(jnp.finfo(jnp.float32).min)).all()
+
+
+def test_sim_best_edge_self_column_excluded_by_labels(rng):
+    """A point's own column is same-component, so the fused path never
+    proposes a self-edge even though the diagonal similarity is maximal."""
+    xs = _rand(rng, (40, 16), jnp.float32)
+    from repro.common import l2_normalize
+
+    xs = l2_normalize(xs)
+    lab = jnp.arange(40, dtype=jnp.int32)  # all singletons
+    pj, _ = sim_best_edge_pallas(xs, xs, lab, lab, interpret=True)
+    assert (np.asarray(pj) != np.arange(40)).all()
+
+
+# ------------------------------------------------------------ label_stats
+
+
+@pytest.mark.parametrize("n,k,d", [(5, 2, 3), (64, 8, 16), (333, 17, 70),
+                                   (400, 100, 257)])
+def test_label_stats_sweep(rng, n, k, d):
+    x = _rand(rng, (n, d), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, k, size=n).astype(np.int32))
+    w = jnp.asarray((rng.random(n) > 0.3).astype(np.float32))
+    for wa in (None, w):
+        rs_, rc = ref.label_stats(x, idx, k, wa)
+        ss_, sc = ref.label_stats_scatter(x, idx, k, wa)
+        ps_, pc = label_stats_pallas(x, idx, k, wa, interpret=True)
+        np.testing.assert_allclose(np.asarray(rs_), np.asarray(ps_),
+                                   rtol=2e-2, atol=1e-1)
+        np.testing.assert_allclose(np.asarray(rs_), np.asarray(ss_),
+                                   rtol=2e-2, atol=1e-1)
+        np.testing.assert_array_equal(np.asarray(rc), np.asarray(pc))
+        np.testing.assert_array_equal(np.asarray(rc), np.asarray(sc))
+
+
+def test_label_stats_drops_out_of_range_labels(rng):
+    """-1 padding labels (the distributed sample-HAC pad contract) must fall
+    into no bin on every implementation."""
+    x = jnp.asarray(rng.integers(-4, 5, size=(50, 12)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(-1, 4, size=50).astype(np.int32))
+    want = ref.label_stats(x, idx, 4)
+    for got in (
+        ref.label_stats_scatter(x, idx, 4),
+        label_stats_pallas(x, idx, 4, interpret=True),
+        ops.label_stats(x, idx, 4, impl="xla"),
+    ):
+        np.testing.assert_array_equal(np.asarray(want[0]), np.asarray(got[0]))
+        np.testing.assert_array_equal(np.asarray(want[1]), np.asarray(got[1]))
+    keep = np.asarray(idx) >= 0
+    np.testing.assert_array_equal(
+        np.asarray(want[0]),
+        np.asarray(ref.label_stats(x[keep], idx[keep], 4)[0]),
+    )
+
+
+def test_label_stats_matches_cluster_stats(rng):
+    """Unweighted label_stats == the older cluster_stats combiner."""
+    x = _rand(rng, (200, 33), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 9, size=200).astype(np.int32))
+    cs_, cc = cluster_stats_pallas(x, idx, 9, interpret=True)
+    ls_, lc = label_stats_pallas(x, idx, 9, interpret=True)
+    np.testing.assert_allclose(np.asarray(cs_), np.asarray(ls_),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(cc), np.asarray(lc))
+
+
+# ------------------------------------------------------------ d-tiled fused
+
+
+def test_assign_stats_forced_d_split_bitexact(rng):
+    """bd override forces the accumulator split at small sizes: the head
+    kernel + label_stats tail must equal the single-tile path bit-for-bit on
+    integer data."""
+    x = jnp.asarray(rng.integers(-8, 9, size=(300, 300)).astype(np.float32))
+    c = jnp.asarray(rng.integers(-8, 9, size=(17, 300)).astype(np.float32))
+    want = assign_stats_pallas(x, c, interpret=True)  # fits in one tile
+    got = assign_stats_pallas(x, c, interpret=True, bd=128)
+    for a, b, name in zip(want, got, ops.AssignStats._fields):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+
+
+def test_assign_stats_d_tiled_beyond_vmem_ceiling(rng):
+    """k*d = 2048x4096 (4x the ACC_BUDGET ceiling): the auto d-split must
+    engage and stay bit-exact against the oracle on integer data."""
+    n, k, d = 96, 2048, 4096
+    assert k * d * 4 > ACC_BUDGET, "test must exceed the single-tile budget"
+    x = jnp.asarray(rng.integers(-4, 5, size=(n, d)).astype(np.float32))
+    c = jnp.asarray(rng.integers(-4, 5, size=(k, d)).astype(np.float32))
+    want = ref.assign_stats(x, c)
+    got = assign_stats_pallas(x, c, interpret=True)
+    for a, b, name in zip(want, got, ops.AssignStats._fields):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+    # and the scatter-based XLA production path agrees bit-for-bit too
+    gsc = ref.assign_stats_scatter(x, c)
+    for a, b, name in zip(want, gsc, ops.AssignStats._fields):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+
+
+def test_assign_stats_chunked_equals_oneshot_d_tiled(rng):
+    """Chunked-vs-oneshot bit parity THROUGH the d-tiled accumulator path
+    (k*d beyond the single-tile budget), weighted and unweighted."""
+    n, k, d = 600, 2048, 4096
+    x = jnp.asarray(rng.integers(-3, 4, size=(n, d)).astype(np.float32))
+    c = jnp.asarray(rng.integers(-3, 4, size=(k, d)).astype(np.float32))
+    w = jnp.asarray((rng.random(n) > 0.1).astype(np.float32))
+    for wa in (None, w):
+        one = ops.assign_stats(x, c, wa, impl="pallas_interpret")
+        chk = ops.assign_stats_chunked(
+            x, c, wa, chunk=250, impl="pallas_interpret"  # does not divide n
+        )
+        for a, b, name in zip(one, chk, one._fields):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b), err_msg=name
+            )
+
+
 # ------------------------------------------------------------ flash_decode
 
 
@@ -335,6 +511,24 @@ def test_assign_stats_property(n, k, d, seed):
         np.testing.assert_allclose(
             np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4
         )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    r=st.integers(1, 100), c=st.integers(1, 100), d=st.integers(1, 60),
+    labels=st.integers(1, 8), seed=st.integers(0, 2**31 - 1),
+)
+def test_sim_best_edge_property(r, c, d, labels, seed):
+    rr = np.random.default_rng(seed)
+    xr = jnp.asarray(rr.normal(size=(r, d)).astype(np.float32))
+    xc = jnp.asarray(rr.normal(size=(c, d)).astype(np.float32))
+    lr = jnp.asarray(rr.integers(0, labels, size=r).astype(np.int32))
+    lc = jnp.asarray(rr.integers(0, labels, size=c).astype(np.int32))
+    rj, rs_ = ref.sim_best_edge(xr, xc, lr, lc)
+    pj, ps = sim_best_edge_pallas(xr, xc, lr, lc, interpret=True)
+    np.testing.assert_array_equal(np.asarray(rj), np.asarray(pj))
+    np.testing.assert_allclose(np.asarray(rs_), np.asarray(ps),
+                               rtol=1e-4, atol=1e-4)
 
 
 @settings(max_examples=20, deadline=None)
