@@ -14,6 +14,9 @@ experimental grid on the synthetic 20_newsgroups analogue:
               certified by the dry-run roofline, not wall clock — DESIGN.md §7
   phase1    : matrix-free Buckshot phase 1 at paper scale (s=16k, d=2048) —
               the (s, s) sim matrix (1 GiB f32) never materializes
+  phase1_distributed : Borůvka phase 1 on a forced 4-device CPU mesh —
+              per-component pre-reduce (O(c·P) shuffle) vs per-row gather
+              (O(s·P)), wall clock + analytic per-round shuffle bytes
 
 Environment:
   BENCH_SCALE   float, scales n for the '1GB' tables (default 0.08 -> n=20k;
@@ -27,7 +30,7 @@ CLI:
   --only NAMES  comma-separated table function names (e.g. kernel_bench)
 
 Every table driver also times the legacy two-pass (assign_argmax +
-cluster_stats) variant next to the fused single-pass default, so the
+label_stats) variant next to the fused single-pass default, so the
 fused-kernel win shows up end to end, not just in the kernel micro-bench.
 
 Beyond the paper: purity/NMI vs ground-truth topics for every run (the
@@ -269,9 +272,11 @@ def kernel_bench():
     row(f"kernel_assign_argmax_{n}x2048x256", t_assign,
         f"gflops_s={flops / t_assign / 1e3:.1f}")
 
+    # the retired cluster_stats kernel's duties now ride the weighted,
+    # d-tiled label_stats path (same contract, unweighted)
     idx = jnp.asarray(rng.integers(0, 256, n).astype(np.int32))
-    _, t_stats = timed(ops.cluster_stats, x, idx, 256)
-    row(f"kernel_cluster_stats_{n}x2048_k256", t_stats,
+    _, t_stats = timed(ops.label_stats, x, idx, 256)
+    row(f"kernel_label_stats_{n}x2048_k256", t_stats,
         f"gbytes_s={n * 2048 * 4 / t_stats / 1e3:.2f}")
 
     # fused single-pass assign+stats vs the two-pass pipeline above: the
@@ -306,6 +311,17 @@ def kernel_bench():
     lab = jnp.asarray(rng.integers(0, 40, 2000).astype(np.int32))
     _, t = timed(ops.best_edge, sim, lab, lab)
     row("kernel_best_edge_2000x2000", t, f"gbytes_s={2000 * 2000 * 4 / t / 1e3:.2f}")
+
+    # segmented component pre-reduce: the Borůvka combiner that shrinks the
+    # distributed shuffle from O(s) per shard to O(#components)
+    cw = jnp.asarray(rng.normal(size=20_000).astype(np.float32))
+    cj = jnp.asarray(rng.integers(0, 20_000, 20_000).astype(np.int32))
+    crow = jnp.arange(20_000, dtype=jnp.int32)
+    ccomp = jnp.asarray(rng.integers(0, 512, 20_000).astype(np.int32))
+    _, t_cr = timed(ops.component_best_edge, cw, cj, crow, ccomp, 512)
+    row("kernel_component_best_edge_20000_c512", t_cr,
+        f"gbytes_s={20_000 * 16 / t_cr / 1e3:.2f};"
+        f"candidates_folded={20_000 - 512}")
 
     # fused sim build + edge search: what best_edge costs once you stop
     # pretending someone else paid for the (s, s) matrix
@@ -352,8 +368,84 @@ def phase1_bench():
         f"sim_matrix_bytes_avoided={4 * s2 * s2}")
 
 
+def phase1_distributed():
+    """Distributed Borůvka phase 1 on a forced 4-device CPU mesh: the
+    shuffle-light per-component pre-reduce vs the legacy per-row gather.
+
+    Runs in a subprocess (the main bench process must keep one device) and
+    records, per path, wall clock plus the ANALYTIC per-round shuffle
+    footprint: O(c·P) bytes shrinking along the Borůvka halving bound for
+    the pre-reduced path vs a constant O(s·P) for the per-row gather — the
+    gathered bytes scale with component count, not s (DESIGN.md §9)."""
+    import subprocess
+    import sys
+    import textwrap
+
+    # d kept small on purpose: the O(s^2 d) candidate sweep is IDENTICAL in
+    # both paths, and at large d it drowns the shuffle+merge delta this row
+    # exists to measure
+    s, d = (2048, 128) if SMALL else (16384, 64)
+    child = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import time
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.common import l2_normalize
+        from repro.distrib.hac_parallel import (
+            boruvka_mst_distributed, shuffle_bytes_per_round)
+        from repro.distrib.sharding import make_flat_mesh
+
+        s, d, P = {s}, {d}, 4
+        mesh = make_flat_mesh(P)
+        rng = np.random.default_rng(5)
+        xs = l2_normalize(jnp.asarray(
+            rng.normal(size=(s, d)).astype(np.float32)))
+        for pre in (True, False):
+            e = boruvka_mst_distributed(mesh, ("data",), xs, pre_reduce=pre)
+            jax.block_until_ready(e.u)  # warmup & compile
+            us = float("inf")  # best-of-3: the host-chained loop is jittery
+            for _ in range(3):
+                t0 = time.perf_counter()
+                e = boruvka_mst_distributed(mesh, ("data",), xs, pre_reduce=pre)
+                jax.block_until_ready(e.u)
+                us = min(us, (time.perf_counter() - t0) * 1e6)
+            rounds = e.u.shape[0] // s
+            per_round = shuffle_bytes_per_round(s, P, rounds, pre_reduce=pre)
+            name = "prereduce" if pre else "rowgather"
+            print(f"RESULT {{name}} us={{us:.1f}} rounds={{rounds}}"
+                  f" shuffle_bytes={{sum(per_round)}}"
+                  f" per_round={{'|'.join(str(b) for b in per_round)}}")
+    """)
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    env.setdefault("PYTHONPATH", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", child], capture_output=True, text=True,
+        timeout=3600, env=env,
+    )
+    if out.returncode != 0:
+        print(f"# phase1_distributed: subprocess failed\n{out.stderr}")
+        return
+    got = {}
+    for line in out.stdout.splitlines():
+        if line.startswith("RESULT "):
+            _, name, *kvs = line.split()
+            got[name] = dict(kv.split("=", 1) for kv in kvs)
+    pre, leg = got["prereduce"], got["rowgather"]
+    pre_us, leg_us = float(pre["us"]), float(leg["us"])
+    row(f"phase1_distributed_prereduce_s{s}_d{d}_P4", pre_us,
+        f"rounds={pre['rounds']};shuffle_bytes={pre['shuffle_bytes']};"
+        f"shuffle_bytes_per_round={pre['per_round']};"
+        f"rowgather_us={leg_us:.1f};speedup={leg_us / pre_us:.2f}x")
+    row(f"phase1_distributed_rowgather_s{s}_d{d}_P4", leg_us,
+        f"rounds={leg['rounds']};shuffle_bytes={leg['shuffle_bytes']};"
+        f"shuffle_bytes_per_round={leg['per_round']};"
+        f"shuffle_reduction="
+        f"{float(leg['shuffle_bytes']) / max(float(pre['shuffle_bytes']), 1):.1f}x")
+
+
 TABLES = [table1, table2, table3, table4, table5, table6, table7, table8,
-          table9, table10, kernel_bench, phase1_bench]
+          table9, table10, kernel_bench, phase1_bench, phase1_distributed]
 
 
 def main(argv: list[str] | None = None) -> None:

@@ -143,6 +143,42 @@ def single_link_labels(sim: jax.Array, k: int) -> jax.Array:
 # never exists), then one replicated O(s) alignment merges components.
 
 
+def _align_merge(
+    labels: jax.Array,  # (s,) current component labels (min-id)
+    eu: jax.Array,  # (s,) proposed edge row endpoint, slotted at the root id
+    ev: jax.Array,  # (s,) proposed edge col endpoint
+    ew: jax.Array,  # (s,) proposed edge weight (NEG where no proposal)
+    propose: jax.Array,  # (s,) bool, True iff slot's root proposes an edge
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Shared Borůvka alignment tail: mutual-edge dedupe + label propagation.
+
+    Consumed by both winner-selection front ends: `_merge_round` (per-row
+    candidates, replicated lexsort) and `_merge_round_pre` (pre-reduced
+    per-component winners from the distributed combiner).
+    """
+    s = labels.shape[0]
+    rows = jnp.arange(s, dtype=jnp.int32)
+    target = labels[ev]  # component the edge lands in
+
+    # mutual dedupe: if target proposes back to us with the same undirected
+    # edge, keep only the lower root's copy.
+    root = rows
+    t_eu = eu[target]
+    t_ev = ev[target]
+    mutual_same = jnp.logical_and(t_eu == ev, t_ev == eu)
+    drop = jnp.logical_and(
+        jnp.logical_and(propose, propose[target]),
+        jnp.logical_and(mutual_same, root > target),
+    )
+    evalid = jnp.logical_and(propose, ~drop)
+
+    # merge: label propagation over the proposal edges (roots <-> targets)
+    new_labels = components_from_edges(s, root, target, propose)
+    # carry through to point level: every point takes its root's new label
+    new_point_labels = new_labels[labels]
+    return new_point_labels, eu, ev, ew, evalid
+
+
 @jax.jit
 def _merge_round(
     labels: jax.Array,  # (s,) current component labels (min-id)
@@ -178,25 +214,62 @@ def _merge_round(
     eu = jnp.where(propose, win_row, 0)
     ev = jnp.where(propose, row_j[win_row], 0)
     ew = jnp.where(propose, row_w[win_row], NEG)
-    target = labels[ev]  # component the edge lands in
+    return _align_merge(labels, eu, ev, ew, propose)
 
-    # mutual dedupe: if target proposes back to us with the same undirected
-    # edge, keep only the lower root's copy.
-    root = rows
-    t_eu = eu[target]
-    t_ev = ev[target]
-    mutual_same = jnp.logical_and(t_eu == ev, t_ev == eu)
-    drop = jnp.logical_and(
-        jnp.logical_and(propose, propose[target]),
-        jnp.logical_and(mutual_same, root > target),
+
+@jax.jit
+def _merge_round_pre(
+    labels: jax.Array,  # (s,) current component labels (min-id)
+    best_w: jax.Array,  # (c,) pre-reduced best weight per dense component
+    best_row: jax.Array,  # (c,) winning global row id per dense component
+    best_j: jax.Array,  # (c,) winning col per dense component (-1 if none)
+    comp_to_root: jax.Array,  # (c,) dense component id -> root point id
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Pre-reduced Borůvka alignment: the shuffle-light entry point.
+
+    Consumes per-COMPONENT winners straight off the distributed combiner
+    (`ops.component_best_edge` + the engine's 'component' reduce) instead of
+    per-row candidates — no replicated O(s log s) lexsort, just an O(c)
+    scatter into the point-id slot layout `_align_merge` expects. The winner
+    ordering (w desc, row asc) is identical to `_merge_round`'s, so both
+    entry points build the same forest.
+    """
+    s = labels.shape[0]
+    has_edge = best_j >= 0
+    slot = jnp.where(has_edge, comp_to_root, s)  # no-edge comps are dropped
+    eu = jnp.zeros((s,), jnp.int32).at[slot].set(
+        best_row.astype(jnp.int32), mode="drop"
     )
-    evalid = jnp.logical_and(propose, ~drop)
+    ev = jnp.zeros((s,), jnp.int32).at[slot].set(
+        jnp.maximum(best_j, 0).astype(jnp.int32), mode="drop"
+    )
+    ew = jnp.full((s,), NEG, jnp.float32).at[slot].set(best_w, mode="drop")
+    propose = jnp.zeros((s,), bool).at[slot].set(has_edge, mode="drop")
+    return _align_merge(labels, eu, ev, ew, propose)
 
-    # merge: label propagation over the proposal edges (roots <-> targets)
-    new_labels = components_from_edges(s, root, target, propose)
-    # carry through to point level: every point takes its root's new label
-    new_point_labels = new_labels[labels]
-    return new_point_labels, eu, ev, ew, evalid
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def _round_prep(
+    labels: jax.Array, cap: int
+) -> tuple[jax.Array, jax.Array]:
+    """Dense component ids for one Borůvka round.
+
+    Labels are min-id (sparse in [0, s)); the combiner and the 'component'
+    reduce want DENSE ids so the per-round arrays are O(cap), where cap is
+    the Borůvka halving bound ceil(s / 2^round) >= #components.
+
+    Returns (comp (s,) dense id per point, comp_to_root (cap,) dense id ->
+    root point id).
+    """
+    s = labels.shape[0]
+    rows = jnp.arange(s, dtype=jnp.int32)
+    is_root = labels == rows
+    dense = jnp.cumsum(is_root.astype(jnp.int32)) - 1  # rank of each root
+    comp = dense[labels]
+    comp_to_root = jnp.zeros((cap,), jnp.int32).at[
+        jnp.where(is_root, dense, cap)
+    ].set(rows, mode="drop")
+    return comp, comp_to_root
 
 
 def _rounds_for(s: int) -> int:

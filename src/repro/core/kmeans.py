@@ -6,7 +6,7 @@ One iteration == one MapReduce job == ONE fused pass over the documents:
   reduce      -> global new centers                (psum in the distributed path)
 
 ``fused=False`` keeps the legacy two-pass path (assign_argmax then
-cluster_stats) for benchmarking the fusion win; production paths default to
+label_stats) for benchmarking the fusion win; production paths default to
 fused.
 
 This module is the single-device reference; distrib/engine.py lifts the exact
@@ -63,7 +63,7 @@ def kmeans_step(
         idx, best_sim, sums, counts = st.idx, st.best_sim, st.sums, st.counts
     else:
         idx, best_sim = ops.assign_argmax(x, centers, impl=impl)
-        sums, counts = ops.cluster_stats(x, idx, k, impl=impl)
+        sums, counts = ops.label_stats(x, idx, k, impl=impl)
     means = sums / jnp.maximum(counts, 1.0)[:, None]
     new_centers = jnp.where(counts[:, None] > 0, l2_normalize(means), centers)
     return new_centers, idx, best_sim, sums, counts

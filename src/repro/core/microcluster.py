@@ -44,7 +44,7 @@ def build_microclusters(
     """BKC steps 2-3: assign every doc to its most similar center, build MCs.
 
     fused=True gets assignment + CF1 + counts + CF2 + min_sim from ONE
-    assign_stats pass (no separate cluster_stats / segment_sum / segment_min
+    assign_stats pass (no separate label_stats / segment_sum / segment_min
     passes over x); fused=False keeps the legacy multi-pass path for
     benchmarks.
 
@@ -56,7 +56,7 @@ def build_microclusters(
         sums, counts, cf2, min_sim = st.sums, st.counts, st.sumsq, st.min_sim
     else:
         idx, best_sim = ops.assign_argmax(x, centers, impl=impl)
-        sums, counts = ops.cluster_stats(x, idx, big_k, impl=impl)
+        sums, counts = ops.label_stats(x, idx, big_k, impl=impl)
         sq = jnp.sum(x.astype(jnp.float32) ** 2, axis=1)
         cf2 = jax.ops.segment_sum(sq, idx, num_segments=big_k)
         min_sim = segment_min(best_sim, idx, big_k)

@@ -7,6 +7,15 @@ per-output reduction kind (the shuffle+reduce):
                             (replicated result on every device)
   'shard'                -> stays sharded like the input rows (e.g. per-doc
                             assignment labels)
+  'component'            -> segmented lexicographic best-edge merge: the leaf
+                            is a {'w', 'row', 'col'} dict of per-shard
+                            per-component winners; three pmax/pmin passes pick
+                            the global (w desc, row asc) winner per segment —
+                            O(#components) wire traffic, never O(rows)
+
+Reduce kinds may sit at any PREFIX of the output pytree (a single kind can
+cover a whole subtree — 'component' relies on this to see its w/row/col
+triple together).
 
 The combiner discipline is what made PKMeans efficient on Hadoop and is what
 keeps the ICI traffic at O(k*d) here: map_combine must aggregate locally before
@@ -19,19 +28,41 @@ import functools
 from typing import Any, Callable
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.distrib.sharding import data_spec
 
-_REDUCERS: dict[str, Callable[[jax.Array, Any], jax.Array]] = {
+
+def _component_reduce(v: dict, axes) -> dict:
+    """Cross-shard fold of per-component best edges, (w desc, row asc).
+
+    Each shard contributes its local winner per dense component id
+    (ops.component_best_edge output; empty segments carry (f32.min, BIG_I,
+    -1), which lose every comparison). Global row ids are unique across
+    shards, so after the (w, row) fold the winner is unique and its col
+    follows by one more pmin — three O(#components) collectives replace the
+    O(rows) per-row candidate gather.
+    """
+    big_i = jnp.iinfo(jnp.int32).max
+    w = jax.lax.pmax(v["w"], axes)
+    on_max = v["w"] == w
+    row = jax.lax.pmin(jnp.where(on_max, v["row"], big_i), axes)
+    mine = jnp.logical_and(on_max, v["row"] == row)
+    col = jax.lax.pmin(jnp.where(mine, v["col"], big_i), axes)
+    return {"w": w, "row": row, "col": jnp.where(col == big_i, -1, col)}
+
+
+_REDUCERS: dict[str, Callable[[Any, Any], Any]] = {
     "sum": jax.lax.psum,
     "min": jax.lax.pmin,
     "max": jax.lax.pmax,
     # 'gather': concatenate per-shard results (replicated) — used when the
     # reducer needs all candidates (e.g. distributed top-s sampling).
     "gather": lambda v, axes: jax.lax.all_gather(v, axes, tiled=True),
+    "component": _component_reduce,
 }
 
 
@@ -50,24 +81,28 @@ def make_job(
       axes: mesh axis name(s) the data rows are sharded over.
       map_combine: (data_shard_pytree, bcast_pytree) -> out_pytree. Runs on each
         shard; must do its own local aggregation (the combiner).
-      reduce_kinds: pytree matching out_pytree with
-        'sum'|'min'|'max'|'gather'|'shard' string leaves.
+      reduce_kinds: pytree PREFIX of out_pytree with
+        'sum'|'min'|'max'|'gather'|'component'|'shard' string leaves; a kind
+        covers the whole out subtree below it ('component' expects a
+        {'w','row','col'} dict there).
       name: debugging label.
 
     Returns:
       jitted fn (data_pytree, bcast_pytree) -> out_pytree. Data arrays are
       sharded on dim 0; bcast arrays are replicated.
     """
+    flat_kinds, kinds_def = jax.tree_util.tree_flatten(reduce_kinds)
 
     def inner(data, bcast):
         out = map_combine(data, bcast)
-        flat_out, treedef = jax.tree_util.tree_flatten(out)
-        flat_kinds = treedef.flatten_up_to(reduce_kinds)
+        # reduce_kinds is a prefix tree: each kind leaf reduces its whole out
+        # subtree (psum-family collectives accept pytrees).
+        out_parts = kinds_def.flatten_up_to(out)
         reduced = [
-            v if kind == "shard" else _REDUCERS[kind](v, axes)
-            for v, kind in zip(flat_out, flat_kinds)
+            part if kind == "shard" else _REDUCERS[kind](part, axes)
+            for part, kind in zip(out_parts, flat_kinds)
         ]
-        return jax.tree_util.tree_unflatten(treedef, reduced)
+        return jax.tree_util.tree_unflatten(kinds_def, reduced)
 
     # PartitionSpec need not enumerate trailing dims: P(axes) shards dim 0 and
     # replicates the rest, so specs derive purely from pytree structure.

@@ -8,27 +8,47 @@ merge step aligns them globally. Borůvka gives the same fixpoint with an
 O(log s) round guarantee, so that is the TPU-native form (DESIGN.md §2, §8).
 
 The single-device machinery (merge round, edge cut, matrix-free candidate
-search) lives in core/hac.py — this module only lifts the per-row edge search
-onto the mesh:
+search) lives in core/hac.py — this module only lifts the per-round edge
+search onto the mesh:
 
 Layout: the s sample documents are replicated (s = sqrt(kn) is tiny next to
 the collection); each device owns a ROW BLOCK of the (s, s) similarity matrix,
 which never exists anywhere — not even per shard: ops.sim_best_edge folds the
 MXU similarity tiles straight into a per-row (max, argmax). Per round:
 
-  map    : per-row best cross-component edge on the local rows
-           (kernels.ops.sim_best_edge — fused sim build+mask+rowmax+argmax)
-  reduce : 'gather' of the per-shard candidates (the shuffle)
-  merge  : per-component lexicographic best + mutual-edge dedupe + label
-           propagation — O(s) replicated work (the paper's alignment step)
+  map     : per-row best cross-component edge on the local rows
+            (kernels.ops.sim_best_edge — fused sim build+mask+rowmax+argmax)
+  combine : per-shard per-COMPONENT pre-reduce (ops.component_best_edge) —
+            of the shard's O(s/P) candidates only O(#components) can survive
+            the merge, so only those leave the shard (the paper's combiner
+            discipline applied to the edge search, DESIGN.md §9)
+  reduce  : the engine's 'component' fold — three O(#components) collectives
+            pick the global (w desc, row asc) winner per component
+  merge   : mutual-edge dedupe + label propagation on the pre-reduced
+            winners (core.hac._merge_round_pre) — no replicated lexsort
+
+Component ids are DENSIFIED each round and capped by the Borůvka halving
+bound ceil(s / 2^round), so the per-round shuffle SHRINKS geometrically:
+O(s·P) bytes per round under the old per-row gather, O(c·P) now. The
+fully-merged check is computed on device every round but the host syncs on
+it only every ``check_every`` rounds, so rounds keep streaming to the
+device without a per-round host round-trip; a late exit is bounded at
+check_every - 1 no-op rounds and the executed round count is deterministic.
+
+``pre_reduce=False`` keeps the legacy per-row gather path for benchmarking
+the shuffle win (benchmarks/run.py phase1_distributed rows).
 
 The replicated sample is PADDED to a shard multiple (paper-default s rarely
-divides a 3-device mesh): pad rows carry label -1 and are sliced off after
-the gather; pad columns never exist because the broadcast side stays the
-unpadded (s, d) sample.
+divides a 3-device mesh): pad rows carry label -1, which the edge-search
+kernels mask out of the map itself (they propose nothing), and component id
+== cap, which the segmented pre-reduce drops — nothing is sliced after the
+reduce because pad rows never produce candidates in the first place.
 """
 
 from __future__ import annotations
+
+import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +58,8 @@ from repro.common import l2_normalize
 from repro.core.hac import (  # noqa: F401  (re-exported: historical home)
     MSTEdges,
     _merge_round,
+    _merge_round_pre,
+    _round_prep,
     _rounds_for,
     boruvka_mst,
     cut_mst_edges,
@@ -46,29 +68,23 @@ from repro.core.hac import (  # noqa: F401  (re-exported: historical home)
 from repro.distrib.engine import make_job
 from repro.distrib.sharding import mesh_axis_size
 from repro.kernels import ops
+from repro.kernels.ref import BIG_I as _BIG_I
 
 
-def boruvka_mst_distributed(
-    mesh: Mesh,
-    axes: tuple[str, ...],
-    xs: jax.Array,
-    *,
-    impl: str = "xla",
-) -> MSTEdges:
-    """Borůvka MST with the per-row edge search sharded over the mesh.
+def round_cap(s: int, r: int) -> int:
+    """Borůvka halving bound: #components entering round r is <= ceil(s/2^r).
 
-    xs (s, d) replicated; each shard owns ~s/P rows of the edge search
-    (matrix-free — no (s, s) block exists on any device). The merge step runs
-    replicated (O(s) work on (s,)-sized arrays). Rounds are host-chained like
-    the paper's job driver, with an early exit once fully merged.
+    Every component with any cross edge merges with at least one other per
+    round, and on a complete similarity graph every component has a cross
+    edge until a single component remains.
     """
-    s, d = xs.shape
-    xs = l2_normalize(xs)
-    n_shards = mesh_axis_size(mesh, axes)
-    pad = (-s) % n_shards
-    xs_p = (
-        jnp.concatenate([xs, jnp.zeros((pad, d), xs.dtype)]) if pad else xs
-    )
+    return max(1, math.ceil(s / (1 << r)))
+
+
+@functools.lru_cache(maxsize=None)
+def _cand_job(mesh: Mesh, axes: tuple[str, ...], impl: str, pre_reduce: bool):
+    """Cached per-(mesh, axes, impl, mode) candidate job: host-chained rounds
+    re-enter the same jitted shard_map instead of re-tracing per call."""
 
     def cand_map(data, bcast):
         bj, bw = ops.sim_best_edge(
@@ -77,29 +93,135 @@ def boruvka_mst_distributed(
         )
         return {"j": bj.astype(jnp.int32), "w": bw}
 
-    job = make_job(
-        mesh, axes, cand_map, {"j": "shard", "w": "shard"}, name="boruvka_cand"
+    def cand_map_pre(data, bcast):
+        bj, bw = ops.sim_best_edge(
+            data["rows"], bcast["xs"], data["labels"], bcast["all_labels"],
+            impl=impl,
+        )
+        bj = bj.astype(jnp.int32)
+        cap = bcast["comp_to_root"].shape[0]
+        s = bcast["xs"].shape[0]
+        if cap == s:
+            # round 0: every point is its own component, so the segmented
+            # reduce is the identity — scatter each row's candidate straight
+            # into its component slot (pad rows carry comp == cap: dropped)
+            slot = data["comp"]
+            neg = float(jnp.finfo(jnp.float32).min)
+            w = jnp.full((cap,), neg, jnp.float32).at[slot].set(
+                bw, mode="drop")
+            row = jnp.full((cap,), _BIG_I, jnp.int32).at[slot].set(
+                data["rowid"], mode="drop")
+            col = jnp.full((cap,), -1, jnp.int32).at[slot].set(
+                bj, mode="drop")
+        else:
+            w, row, col = ops.component_best_edge(
+                bw, bj, data["rowid"], data["comp"], cap, impl=impl,
+            )
+        return {"best": {"w": w, "row": row, "col": col}}
+
+    if pre_reduce:
+        return make_job(
+            mesh, axes, cand_map_pre, {"best": "component"},
+            name="boruvka_cand_comp",
+        )
+    return make_job(
+        mesh, axes, cand_map, {"j": "shard", "w": "shard"},
+        name="boruvka_cand",
     )
+
+
+def shuffle_bytes_per_round(
+    s: int, n_shards: int, rounds: int, *, pre_reduce: bool = True
+) -> list[int]:
+    """Analytic per-round shuffle footprint of the candidate exchange.
+
+    pre_reduce: each shard contributes one (w f32, row i32, col i32) triple
+    per component, capped by the halving bound — O(c·P) bytes, shrinking
+    geometrically. Legacy per-row gather: every shard's (j i32, w f32) pair
+    for every row crosses shards every round — O(s·P) bytes, constant.
+    """
+    if pre_reduce:
+        return [n_shards * round_cap(s, r) * 12 for r in range(rounds)]
+    return [n_shards * s * 8 for _ in range(rounds)]
+
+
+def boruvka_mst_distributed(
+    mesh: Mesh,
+    axes: tuple[str, ...],
+    xs: jax.Array,
+    *,
+    impl: str = "xla",
+    pre_reduce: bool = True,
+    check_every: int = 3,
+) -> MSTEdges:
+    """Borůvka MST with the per-row edge search sharded over the mesh.
+
+    xs (s, d) replicated; each shard owns ~s/P rows of the edge search
+    (matrix-free — no (s, s) block exists on any device). Rounds are
+    host-chained like the paper's job driver, with a device-side early exit
+    synced to the host every ``check_every`` rounds.
+
+    pre_reduce=True (default) folds each shard's candidates per component
+    before anything crosses shards — O(#components) shuffle per round, with
+    the per-round arrays shrinking along the halving bound. pre_reduce=False
+    is the legacy O(s)-per-shard per-row gather, kept for benchmarks.
+    """
+    s, d = xs.shape
+    xs = l2_normalize(xs)
+    n_shards = mesh_axis_size(mesh, axes)
+    pad = (-s) % n_shards
+    xs_p = (
+        jnp.concatenate([xs, jnp.zeros((pad, d), xs.dtype)]) if pad else xs
+    )
+    rowid_p = jnp.arange(s + pad, dtype=jnp.int32)
+    job = _cand_job(mesh, axes, impl, pre_reduce)
 
     labels = jnp.arange(s, dtype=jnp.int32)
     pad_labels = jnp.full((pad,), -1, jnp.int32)
     rounds = _rounds_for(s)
     eus, evs, ews, evalids = [], [], [], []
-    for _ in range(rounds):
+    for r in range(rounds):
         labels_p = jnp.concatenate([labels, pad_labels]) if pad else labels
-        out = job(
-            {"rows": xs_p, "labels": labels_p},
-            {"xs": xs, "all_labels": labels},
-        )
-        bj = jnp.asarray(out["j"])[:s]  # gather + drop pad-row candidates
-        bw = jnp.asarray(out["w"])[:s]
-        labels, eu, ev, ew, evalid = _merge_round(labels, bw, bj)
+        if pre_reduce:
+            cap = round_cap(s, r)
+            comp, comp_to_root = _round_prep(labels, cap)
+            comp_p = (
+                jnp.concatenate([comp, jnp.full((pad,), cap, jnp.int32)])
+                if pad else comp
+            )
+            out = job(
+                {"rows": xs_p, "labels": labels_p, "rowid": rowid_p,
+                 "comp": comp_p},
+                {"xs": xs, "all_labels": labels,
+                 "comp_to_root": comp_to_root},
+            )
+            best = out["best"]
+            labels, eu, ev, ew, evalid = _merge_round_pre(
+                labels, best["w"], best["row"], best["col"], comp_to_root
+            )
+        else:
+            out = job(
+                {"rows": xs_p, "labels": labels_p},
+                {"xs": xs, "all_labels": labels},
+            )
+            bj = jnp.asarray(out["j"])[:s]  # gather + drop pad-row candidates
+            bw = jnp.asarray(out["w"])[:s]
+            labels, eu, ev, ew, evalid = _merge_round(labels, bw, bj)
         eus.append(eu)
         evs.append(ev)
         ews.append(ew)
         evalids.append(evalid)
-        if bool(jnp.all(labels == 0)):  # single component: forest complete
-            break
+        # early exit: the done flag is computed ON DEVICE every round but the
+        # host only syncs on it every check_every rounds, so rounds keep
+        # streaming to the device without a per-round host round-trip. The
+        # trade is DETERMINISTIC: a late exit costs at most check_every - 1
+        # no-op rounds (cheap merges — evalid stays False — but full candidate
+        # sweeps), and the executed round count never depends on dispatch
+        # timing, so bench-recorded rounds/shuffle bytes are reproducible.
+        done = jnp.all(labels == 0)  # single component: forest complete
+        if (r + 1) % check_every == 0 or r == rounds - 1:
+            if bool(done):
+                break
     return MSTEdges(
         u=jnp.concatenate(eus),
         v=jnp.concatenate(evs),
@@ -109,7 +231,10 @@ def boruvka_mst_distributed(
 
 
 def single_link_labels_distributed(
-    mesh: Mesh, axes: tuple[str, ...], xs: jax.Array, k: int, *, impl: str = "xla"
+    mesh: Mesh, axes: tuple[str, ...], xs: jax.Array, k: int, *,
+    impl: str = "xla", pre_reduce: bool = True,
 ) -> jax.Array:
-    edges = boruvka_mst_distributed(mesh, axes, xs, impl=impl)
+    edges = boruvka_mst_distributed(
+        mesh, axes, xs, impl=impl, pre_reduce=pre_reduce
+    )
     return cut_mst_edges(edges, xs.shape[0], k)

@@ -8,7 +8,8 @@ This kernel reads each x tile ONCE: while the tile is VMEM-resident it is
 used both to pick the nearest center (k sweep, revisited (max, argmax)
 accumulator — same idiom as assign_argmax.py) and, on the final k step, to
 scatter the tile into per-cluster accumulators via an in-VMEM one-hot matmul
-(same idiom as cluster_stats.py). Five results come out of one HBM read:
+(same idiom as the label_stats kernel below). Five results come out of one
+HBM read:
 
   idx (n,), best_sim (n,), sums (k, d), counts (k,), min_sim (k,), sumsq (k,)
 

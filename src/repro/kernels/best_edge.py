@@ -11,7 +11,8 @@ in the revisited output block across the column sweep.
 
 Semantics identical to ref.best_edge: ties take the lowest column index
 (strict > across tiles, first-argmax within a tile); rows with no
-cross-component column get (-1, f32.min).
+cross-component column get (-1, f32.min). Negative row labels mark padding:
+those rows match no column at all.
 """
 
 from __future__ import annotations
@@ -41,7 +42,10 @@ def _kernel(sim_ref, lr_ref, lc_ref, j_ref, s_ref, *, c_real: int, bc: int):
     lc = lc_ref[...]  # (1, BC) int32
 
     col = j * bc + jax.lax.broadcasted_iota(jnp.int32, sim.shape, 1)
-    keep = jnp.logical_and(lr != lc, col < c_real)  # cross-component & unpadded
+    keep = jnp.logical_and(
+        jnp.logical_and(lr != lc, lr >= 0),  # cross-component, unpadded row
+        col < c_real,  # unpadded column
+    )
     masked = jnp.where(keep, sim, NEG)
 
     local_s = jnp.max(masked, axis=1, keepdims=True)
@@ -82,7 +86,7 @@ def best_edge_pallas(
     bc = min(bc, max(8, c))
 
     sp = _pad_to(_pad_to(sim, 0, br), 1, bc)
-    lr = _pad_to(labels_row.astype(jnp.int32)[:, None], 0, br)
+    lr = _pad_to(labels_row.astype(jnp.int32)[:, None] + 1, 0, br) - 1  # pad -> -1
     # pad cols with label -2: never equals a real label, but masked by c_real anyway
     lc = _pad_to(labels_col.astype(jnp.int32)[None, :], 1, bc)
     rp, cp = sp.shape

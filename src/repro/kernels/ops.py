@@ -45,22 +45,6 @@ def assign_argmax(
     return kmod.assign_argmax_pallas(x, centers, interpret=impl == "pallas_interpret")
 
 
-# ---------------------------------------------------------------- stats
-
-
-@functools.partial(jax.jit, static_argnames=("k", "impl"))
-def cluster_stats(
-    x: jax.Array, idx: jax.Array, k: int, *, impl: str = "auto"
-) -> tuple[jax.Array, jax.Array]:
-    """(n,d),(n,) -> ((k,d) sums, (k,) counts). MapReduce combiner."""
-    impl = _resolve(impl)
-    if impl == "xla":
-        return ref.cluster_stats(x, idx, k)
-    from repro.kernels import cluster_stats as kmod
-
-    return kmod.cluster_stats_pallas(x, idx, k, interpret=impl == "pallas_interpret")
-
-
 # ---------------------------------------------------------------- fused
 
 
@@ -260,6 +244,57 @@ def sim_best_edge(
 
     _, (js, ss) = jax.lax.scan(body, None, {"x": xb, "l": lb})
     return js.reshape(-1)[:r], ss.reshape(-1)[:r]
+
+
+# ---------------------------------------------------------------- component pre-reduce
+
+
+@functools.partial(jax.jit, static_argnames=("c", "impl"))
+def component_best_edge(
+    row_w: jax.Array,
+    row_j: jax.Array,
+    rows: jax.Array,
+    comp: jax.Array,
+    c: int,
+    *,
+    impl: str = "auto",
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-shard Borůvka combiner: per-COMPONENT lexicographic best candidate.
+
+    Folds a shard's per-row best-edge candidates into one (weight, row, col)
+    triple per dense component id — ordered (w desc, row asc), exactly the
+    winner ``core.hac._merge_round`` would pick — so only O(#components)
+    values cross the shuffle instead of O(rows). Out-of-range comp ids (pad
+    rows tagged ``c``) contribute nothing; empty segments get
+    (f32.min, BIG_I, -1).
+
+    The XLA path is three segment reductions (max on w, then min on row among
+    the w-winners, then the unique winner's col) — O(r) scatter work, no sort.
+    """
+    impl = _resolve(impl)
+    if impl != "xla":
+        from repro.kernels import component_reduce as kmod
+
+        return kmod.component_best_edge_pallas(
+            row_w, row_j, rows, comp, c,
+            interpret=impl == "pallas_interpret",
+        )
+    neg = jnp.finfo(jnp.float32).min
+    w = row_w.astype(jnp.float32)
+    rows = rows.astype(jnp.int32)
+    comp = comp.astype(jnp.int32)
+    # segment_max fills empty segments with -inf; normalize to the NEG sentinel
+    best_w = jnp.maximum(jax.ops.segment_max(w, comp, num_segments=c), neg)
+    on_max = w == best_w[comp]
+    best_row = jax.ops.segment_min(
+        jnp.where(on_max, rows, ref.BIG_I), comp, num_segments=c
+    )
+    winner = jnp.logical_and(on_max, rows == best_row[comp])  # unique per segment
+    best_j = jax.ops.segment_min(
+        jnp.where(winner, row_j.astype(jnp.int32), ref.BIG_I),
+        comp, num_segments=c,
+    )
+    return best_w, best_row, jnp.where(best_j == ref.BIG_I, -1, best_j)
 
 
 # ---------------------------------------------------------------- flash decode

@@ -1,9 +1,10 @@
 """Pure-jnp oracles for every Pallas kernel in this package.
 
 Each function here is the semantic ground truth. Kernel implementations in
-``assign_argmax.py`` / ``cluster_stats.py`` / ``best_edge.py`` /
-``flash_decode.py`` are validated against these in interpret mode across
-shape/dtype sweeps (tests/test_kernels.py).
+``assign_argmax.py`` / ``assign_stats.py`` / ``best_edge.py`` /
+``sim_best_edge.py`` / ``component_reduce.py`` / ``flash_decode.py`` are
+validated against these in interpret mode across shape/dtype sweeps
+(tests/test_kernels.py).
 """
 
 from __future__ import annotations
@@ -15,6 +16,10 @@ import jax.numpy as jnp
 # and convertible by callers (microclusters map empty -> 1.0). finfo.max, not
 # inf, so arithmetic on unconsumed lanes stays finite.
 BIG = float(jnp.finfo(jnp.float32).max)
+
+# Sentinel for "no row seen" in segmented argmin folds: min-reducible across
+# shards (jax.lax.pmin) the way BIG is for similarities.
+BIG_I = int(jnp.iinfo(jnp.int32).max)
 
 
 def assign_argmax(x: jax.Array, centers: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -40,6 +45,10 @@ def cluster_stats(
     x: jax.Array, idx: jax.Array, k: int
 ) -> tuple[jax.Array, jax.Array]:
     """Combiner: per-cluster sums and counts (the MapReduce 'combine' step).
+
+    Historical oracle: the dedicated cluster_stats kernel is retired (the
+    weighted, d-tiled ``label_stats`` subsumes it); this one-hot formulation
+    survives as the ground truth label_stats is validated against.
 
     Args:
       x: (n, d) document vectors.
@@ -183,7 +192,9 @@ def best_edge(
 
     Args:
       sim: (r, c) similarity block; rows are this shard's points.
-      labels_row: (r,) component label of each row point.
+      labels_row: (r,) component label of each row point. NEGATIVE row labels
+        mark padding: those rows propose nothing (-1, f32.min) — they are
+        masked out of the map itself, not sliced off after a gather.
       labels_col: (c,) component label of each column point.
 
     Returns:
@@ -192,7 +203,9 @@ def best_edge(
       best_s: (r,) f32 similarity of that edge (-inf if none).
     """
     neg = jnp.finfo(jnp.float32).min
-    cross = labels_row[:, None] != labels_col[None, :]
+    cross = jnp.logical_and(
+        labels_row[:, None] != labels_col[None, :], labels_row[:, None] >= 0
+    )
     masked = jnp.where(cross, sim.astype(jnp.float32), neg)
     best_j = jnp.argmax(masked, axis=1).astype(jnp.int32)
     best_s = jnp.max(masked, axis=1)
@@ -231,6 +244,54 @@ def sim_best_edge(
         preferred_element_type=jnp.float32,
     )
     return best_edge(sim, labels_row, labels_col)
+
+
+def component_best_edge(
+    row_w: jax.Array,
+    row_j: jax.Array,
+    rows: jax.Array,
+    comp: jax.Array,
+    c: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Segmented pre-reduce: per-COMPONENT lexicographic best candidate.
+
+    The combiner between the per-row Borůvka edge search and the shuffle:
+    of each component's rows, keep only the winning candidate — ordered by
+    (weight desc, row asc); the column needs no tie-break because each row
+    already carries its unique best column. Only O(#components) values
+    survive the merge, so only O(#components) should cross shards.
+
+    Args:
+      row_w: (r,) f32 best cross-component weight per row (f32.min if none).
+      row_j: (r,) int32 best column per row (-1 if none).
+      rows: (r,) int32 GLOBAL row id of each local row.
+      comp: (r,) int32 dense component id in [0, c); out-of-range ids (e.g.
+        pad rows tagged c) fall into no segment.
+      c: number of component segments (static).
+
+    Returns:
+      best_w: (c,) f32 winning weight (f32.min if the segment is empty).
+      best_row: (c,) int32 winning global row id (BIG_I if empty).
+      best_j: (c,) int32 winning column (-1 if empty or the winner has none).
+    """
+    order = jnp.lexsort((rows, -row_w, comp))  # comp asc, w desc, row asc
+    comp_s = comp[order]
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), comp_s[1:] != comp_s[:-1]]
+    )
+    in_range = jnp.logical_and(comp_s >= 0, comp_s < c)
+    slot = jnp.where(jnp.logical_and(first, in_range), comp_s, c)
+    neg = jnp.finfo(jnp.float32).min
+    best_w = jnp.full((c,), neg, jnp.float32).at[slot].set(
+        row_w[order].astype(jnp.float32), mode="drop"
+    )
+    best_row = jnp.full((c,), BIG_I, jnp.int32).at[slot].set(
+        rows[order].astype(jnp.int32), mode="drop"
+    )
+    best_j = jnp.full((c,), -1, jnp.int32).at[slot].set(
+        row_j[order].astype(jnp.int32), mode="drop"
+    )
+    return best_w, best_row, best_j
 
 
 def flash_decode(

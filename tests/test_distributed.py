@@ -130,6 +130,79 @@ def test_distributed_boruvka_non_divisible_sample():
     """)
 
 
+def test_distributed_boruvka_pre_reduce_4dev_matches_oracles():
+    """Shuffle-light path: per-shard per-component pre-reduce + the engine's
+    'component' fold must match BOTH the single-device Borůvka and the Prim
+    oracle on a forced 4-device mesh — including a non-shard-multiple s and
+    the legacy per-row gather path it replaces."""
+    env4 = dict(ENV, XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent("""
+    import numpy as np, jax.numpy as jnp
+    from repro.common import l2_normalize
+    from repro.core.hac import single_link_labels, single_link_labels_boruvka
+    from repro.distrib.hac_parallel import single_link_labels_distributed
+    from repro.distrib.sharding import make_flat_mesh
+
+    mesh = make_flat_mesh(4)
+    rng = np.random.default_rng(7)
+    for s, k in ((320, 9), (322, 7), (9, 3)):  # 322, 9: non-shard-multiple
+        xs = l2_normalize(jnp.asarray(
+            rng.normal(size=(s, 16)).astype(np.float32)))
+        prim = np.asarray(single_link_labels(xs @ xs.T, k))
+        single = np.asarray(single_link_labels_boruvka(xs, k))
+        pre = np.asarray(
+            single_link_labels_distributed(mesh, ("data",), xs, k))
+        legacy = np.asarray(single_link_labels_distributed(
+            mesh, ("data",), xs, k, pre_reduce=False))
+        assert (prim == single).all(), (s, k, "single-device")
+        assert (prim == pre).all(), (s, k, "pre-reduce")
+        assert (prim == legacy).all(), (s, k, "row-gather")
+    print("BORUVKA PRE-REDUCE OK")
+        """)],
+        capture_output=True, text=True, timeout=600, env=env4,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "BORUVKA PRE-REDUCE OK" in out.stdout
+
+
+def test_engine_component_reduce_lexicographic():
+    """The 'component' reduce kind must pick the global (w desc, row asc)
+    winner per segment across shards, with empty-segment identities losing."""
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.distrib.engine import make_job
+    from repro.distrib.sharding import make_flat_mesh, shard_rows
+    from repro.kernels import ops, ref
+
+    mesh = make_flat_mesh(8)
+    rng = np.random.default_rng(3)
+    r, c = 64, 11
+    w = jnp.asarray(rng.normal(size=r).astype(np.float32))
+    w = w.at[::6].set(float(jnp.finfo(jnp.float32).min))
+    w = w.at[17].set(w[50])  # cross-shard duplicate weight: row tie-break
+    col = jnp.asarray(rng.integers(-1, 40, size=r).astype(np.int32))
+    rows = jnp.arange(r, dtype=jnp.int32)
+    comp = jnp.asarray(rng.integers(0, c + 1, size=r).astype(np.int32))
+
+    def mc(data, bcast):
+        bw, brow, bcol = ops.component_best_edge(
+            data["w"], data["col"], data["rows"], data["comp"], c, impl="xla")
+        return {"best": {"w": bw, "row": brow, "col": bcol}}
+
+    job = make_job(mesh, ("data",), mc, {"best": "component"})
+    sh = lambda v: shard_rows(mesh, ("data",), v)
+    out = job({"w": sh(w), "col": sh(col), "rows": sh(rows),
+               "comp": sh(comp)}, {})
+    want = ref.component_best_edge(w, col, rows, comp, c)
+    np.testing.assert_array_equal(np.asarray(out["best"]["w"]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(out["best"]["row"]), np.asarray(want[1]))
+    np.testing.assert_array_equal(np.asarray(out["best"]["col"]), np.asarray(want[2]))
+    print("COMPONENT REDUCE OK")
+    """)
+
+
 def test_compressed_psum_close_to_exact():
     _run("""
     import jax, jax.numpy as jnp, numpy as np
