@@ -1,10 +1,14 @@
-"""Quickstart: cluster a synthetic 20-newsgroups-like corpus three ways.
+"""Quickstart: cluster a synthetic 20-newsgroups-like corpus three ways,
+OUT-OF-CORE — the dense (n, d) matrix never exists.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Generates 4000 documents from a 12-topic model, weights them with tf-idf,
-and runs the paper's three algorithms (K-Means baseline, BKC, Buckshot),
-printing time / RSS / purity for each. ~30s on CPU.
+Generates 4000 documents from a 12-topic model as a chunked stream
+(4 chunks of 1000), weights them with streaming two-pass tf-idf, and runs
+the paper's three algorithms through their streaming entry points (K-Means
+baseline, BKC, Buckshot), printing time / RSS / purity for each. Peak
+residency is O(chunk·d), so the same script runs at n = 1M by changing two
+numbers. ~30s on CPU.
 """
 
 import time
@@ -12,34 +16,37 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import bkc, buckshot, kmeans, metrics
-from repro.text import synth, tfidf
+from repro.core import bkc_stream, buckshot_stream, kmeans_stream, metrics
+from repro.text import pipeline
 
 
 def main() -> None:
-    n, k = 4000, 12
-    print(f"generating corpus: n={n}, topics={k}")
-    corpus = synth.make_corpus(n, vocab=2048, n_topics=k, seed=0)
-    x = tfidf.tfidf(jnp.asarray(corpus.counts))
-    labels = jnp.asarray(corpus.labels)
+    n, k, chunk = 4000, 12, 1000
+    print(f"streaming corpus: n={n}, topics={k}, chunks of {chunk}")
+    prep = pipeline.prepare_synthetic_stream(
+        n_docs=n, vocab=2048, n_topics=k, seed=0, chunk=chunk
+    )
+    xs, labels = prep.x, jnp.asarray(prep.labels)
     key = jax.random.PRNGKey(0)
 
     def report(name, fn):
         fn()  # compile
         t0 = time.perf_counter()
         res = fn()
-        jax.block_until_ready(res)
+        jax.block_until_ready(res.centers if hasattr(res, "centers") else res.kmeans.centers)
         dt = time.perf_counter() - t0
         assignment = res.assignment if hasattr(res, "assignment") else res.kmeans.assignment
         rss = res.rss if hasattr(res, "rss") else res.kmeans.rss
-        pur = metrics.purity(assignment, labels, k, k)
+        pur = metrics.purity(jnp.asarray(assignment), labels, k, k)
         print(f"{name:22s} {dt*1e3:8.1f} ms   RSS={float(rss):8.2f}   "
               f"purity={float(pur):.3f}")
         return dt, float(rss)
 
-    t_km, rss_km = report("K-Means (8 iters)", lambda: kmeans(x, k, key, max_iters=8))
-    t_bk, rss_bk = report("BKC (BigK=64)", lambda: bkc(x, 64, k, key))
-    t_bs, rss_bs = report("Buckshot (2 iters)", lambda: buckshot(x, k, key, kmeans_iters=2))
+    t_km, rss_km = report("K-Means (8 iters)",
+                          lambda: kmeans_stream(xs, k, key, max_iters=8))
+    t_bk, rss_bk = report("BKC (BigK=64)", lambda: bkc_stream(xs, 64, k, key))
+    t_bs, rss_bs = report("Buckshot (2 iters)",
+                          lambda: buckshot_stream(xs, k, key, kmeans_iters=2))
 
     print(f"\nBKC:      {100*(1-t_bk/t_km):5.1f}% faster, "
           f"RSS loss {100*(rss_bk/rss_km-1):+5.2f}%")

@@ -7,12 +7,14 @@
   metrics     — RSS / cosine objective / purity / NMI
 """
 
-from repro.core.bkc import BKCResult, bkc, bkc_fit, join_to_groups
+from repro.core.bkc import BKCResult, bkc, bkc_fit, bkc_stream, join_to_groups
 from repro.core.buckshot import (
     BuckshotResult,
     buckshot,
     buckshot_fit,
     buckshot_phase1,
+    buckshot_stream,
+    phase1_from_sample,
 )
 from repro.core.hac import (
     boruvka_mst,
@@ -20,7 +22,14 @@ from repro.core.hac import (
     single_link_labels,
     single_link_labels_boruvka,
 )
-from repro.core.kmeans import KMeansResult, kmeans, kmeans_fit, kmeans_step
+from repro.core.kmeans import (
+    KMeansResult,
+    kmeans,
+    kmeans_fit,
+    kmeans_fit_stream,
+    kmeans_step,
+    kmeans_stream,
+)
 from repro.core.microcluster import MicroClusters, build_microclusters
 from repro.core import metrics, sampling
 
@@ -31,17 +40,22 @@ __all__ = [
     "MicroClusters",
     "bkc",
     "bkc_fit",
+    "bkc_stream",
     "boruvka_mst",
     "buckshot",
     "buckshot_fit",
     "buckshot_phase1",
+    "buckshot_stream",
     "build_microclusters",
     "join_to_groups",
     "kmeans",
     "kmeans_fit",
+    "kmeans_fit_stream",
     "kmeans_step",
+    "kmeans_stream",
     "metrics",
     "mst_prim",
+    "phase1_from_sample",
     "sampling",
     "single_link_labels",
     "single_link_labels_boruvka",

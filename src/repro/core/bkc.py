@@ -132,12 +132,7 @@ def bkc_fit(
 ) -> BKCResult:
     """Run BKC-for-documents given the BigK sampled center documents."""
     mc, _, _ = build_microclusters(x, init_centers, big_k, impl=impl, fused=fused)
-    group, s = join_to_groups(mc, k)
-
-    # Step 6: centers of the groups = normalized sum of member CF1s.
-    sums = jax.ops.segment_sum(mc.cf1, group, num_segments=k)
-    counts = jax.ops.segment_sum(mc.n, group, num_segments=k)
-    centers = jnp.where(counts[:, None] > 0, l2_normalize(sums), 0.0)
+    centers, group, s = _group_centers(mc, k)
 
     # Step 7: final assignment pass (one K-Means-style iteration); the fused
     # path reuses the same single read of x for assignment AND the RSS stats.
@@ -174,3 +169,81 @@ def bkc(
     idx = jax.random.choice(key, x.shape[0], shape=(big_k,), replace=False)
     centers = l2_normalize(x[idx])
     return bkc_fit(x, centers, big_k, k, impl=impl, fused=fused)
+
+
+# ------------------------------------------------------------------ streaming
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _group_centers(
+    mc: MicroClusters, k: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """joinToGroups + step 6 on the replicated (BigK)-sized state."""
+    group, s = join_to_groups(mc, k)
+    sums = jax.ops.segment_sum(mc.cf1, group, num_segments=k)
+    counts = jax.ops.segment_sum(mc.n, group, num_segments=k)
+    centers = jnp.where(counts[:, None] > 0, l2_normalize(sums), 0.0)
+    return centers, group, s
+
+
+def bkc_fit_stream(
+    stream,
+    init_centers: jax.Array,
+    big_k: int,
+    k: int,
+    *,
+    impl: str = "xla",
+) -> BKCResult:
+    """Out-of-core BKC: passes 1 and 3 stream chunks through the fused kernel
+    with carried accumulators; the K×K group phase runs on the replicated
+    O(BigK·d) micro-cluster statistics as before. Peak residency is
+    O(chunk·d + BigK·d) for any collection size.
+    """
+    from repro.core.kmeans import _stream_pass
+
+    # pass 1: micro-cluster statistics folded over the stream (CF additivity
+    # is the chunk monoid — the same merge_stats the distributed combiner uses)
+    (sums, counts, min_sim, sumsq), _, _, _ = _stream_pass(
+        stream, init_centers, big_k, impl
+    )
+    valid = counts > 0
+    mc = MicroClusters(
+        n=counts,
+        cf1=sums,
+        cf2=sumsq,
+        centers=init_centers,
+        min_sim=jnp.where(valid, min_sim, 1.0),
+        valid=valid,
+    )
+    centers, group, s = _group_centers(mc, k)
+
+    # pass 3: final assignment — same streaming pass against the k centers
+    (sums, counts, _, sumsq), idx, best_sim, obj = _stream_pass(
+        stream, centers, k, impl, collect=True
+    )
+    rss = metrics.rss_from_assignment_stats(sums, counts, jnp.sum(sumsq), k)
+    return BKCResult(
+        centers=centers,
+        assignment=idx,
+        best_sim=best_sim,
+        rss=rss,
+        objective=obj,
+        group_of_mc=group,
+        threshold=s,
+    )
+
+
+def bkc_stream(
+    stream,
+    big_k: int,
+    k: int,
+    key: jax.Array,
+    *,
+    impl: str = "xla",
+) -> BKCResult:
+    """Streaming convenience entry: the BigK random center documents come
+    from the one-pass reservoir (exact uniform sample), then the fit."""
+    from repro.core.sampling import reservoir_sample_stream
+
+    rows, _ = reservoir_sample_stream(stream, big_k, key)
+    return bkc_fit_stream(stream, l2_normalize(rows), big_k, k, impl=impl)

@@ -39,6 +39,34 @@ class BuckshotResult(NamedTuple):
 
 
 @functools.partial(jax.jit, static_argnames=("k", "impl", "hac"))
+def phase1_from_sample(
+    xs: jax.Array,
+    k: int,
+    *,
+    impl: str = "xla",
+    hac: str = "boruvka",
+) -> tuple[jax.Array, jax.Array]:
+    """Phase 1 on already-collected sample rows (s, d): HAC labels + centers.
+
+    The shared core behind the resident (gathered rows) and streaming
+    (reservoir rows) entry points — the sample is O(s·d) either way.
+    """
+    xs = l2_normalize(xs)
+    if hac == "prim":
+        labels = single_link_labels(xs @ xs.T, k)
+    elif hac == "boruvka":
+        labels = single_link_labels_boruvka(xs, k, impl=impl)
+    else:
+        raise ValueError(f"unknown hac implementation: {hac!r}")
+
+    # HAC hands us labels directly (no assign step), so the center build is
+    # ONE fused label_stats pass over the sample (d-tiled accumulator grid).
+    sums, counts = ops.label_stats(xs, labels, k, impl=impl)
+    init_centers = jnp.where(counts[:, None] > 0, l2_normalize(sums), 0.0)
+    return labels, init_centers
+
+
+@functools.partial(jax.jit, static_argnames=("k", "impl", "hac"))
 def buckshot_phase1(
     x: jax.Array,
     sample_idx: jax.Array,
@@ -55,19 +83,7 @@ def buckshot_phase1(
 
     Returns (labels (s,), init_centers (k, d)).
     """
-    xs = l2_normalize(x[sample_idx])
-    if hac == "prim":
-        labels = single_link_labels(xs @ xs.T, k)
-    elif hac == "boruvka":
-        labels = single_link_labels_boruvka(xs, k, impl=impl)
-    else:
-        raise ValueError(f"unknown hac implementation: {hac!r}")
-
-    # HAC hands us labels directly (no assign step), so the center build is
-    # ONE fused label_stats pass over the sample (d-tiled accumulator grid).
-    sums, counts = ops.label_stats(xs, labels, k, impl=impl)
-    init_centers = jnp.where(counts[:, None] > 0, l2_normalize(sums), 0.0)
-    return labels, init_centers
+    return phase1_from_sample(x[sample_idx], k, impl=impl, hac=hac)
 
 
 @functools.partial(
@@ -115,4 +131,41 @@ def buckshot(
     return buckshot_fit(
         x, sample_idx, k, kmeans_iters=kmeans_iters, impl=impl, fused=fused,
         hac=hac,
+    )
+
+
+# ------------------------------------------------------------------ streaming
+
+
+def buckshot_stream(
+    stream,
+    k: int,
+    key: jax.Array,
+    *,
+    sample_size: int | None = None,
+    kmeans_iters: int = 3,
+    tol: float = 0.0,
+    impl: str = "xla",
+    hac: str = "boruvka",
+) -> BuckshotResult:
+    """Out-of-core Buckshot: the s = √(kn) sample comes from a one-pass
+    running top-s reservoir over the chunk stream (exact uniform sample —
+    core/sampling.reservoir_sample_stream), phase 1 runs matrix-free on the
+    O(s·d) sample, and phase 2 streams the whole collection through the
+    carried-accumulator K-Means passes. Peak residency O(chunk·d + s·d + k·d)
+    — the dense (n, d) matrix never exists anywhere.
+    """
+    from repro.core.kmeans import kmeans_fit_stream
+
+    s = sample_size or sampling.buckshot_sample_size(stream.n, k)
+    rows, sample_idx = sampling.reservoir_sample_stream(stream, s, key)
+    labels, init_centers = phase1_from_sample(rows, k, impl=impl, hac=hac)
+    km = kmeans_fit_stream(
+        stream, init_centers, k, max_iters=kmeans_iters, tol=tol, impl=impl
+    )
+    return BuckshotResult(
+        kmeans=km,
+        sample_idx=jnp.asarray(sample_idx),
+        sample_labels=labels,
+        init_centers=init_centers,
     )

@@ -21,6 +21,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.common import l2_normalize
 from repro.core import metrics
@@ -136,4 +137,106 @@ def kmeans(
         init_centers = init_random_centers(key, x, k)
     return kmeans_fit(
         x, init_centers, k, max_iters=max_iters, tol=tol, impl=impl, fused=fused
+    )
+
+
+# ------------------------------------------------------------------ streaming
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def _stream_fold_chunk(carry, x, w, centers, *, impl: str = "xla"):
+    """Fold one chunk: ONE fused kernel call, monoid-merge into the carry.
+
+    Also returns the chunk's (idx, best_sim, weighted objective term) — they
+    fall out of the same single read of the chunk, so the final pass collects
+    assignments at zero extra cost.
+    """
+    st = ops.assign_stats(x, centers, w, impl=impl)
+    obj = jnp.sum(w * (1.0 - st.best_sim))  # pad rows carry w == 0
+    return ops.merge_stats(carry, st), (st.idx, st.best_sim, obj)
+
+
+def _stream_pass(stream, centers, k: int, impl: str, collect: bool = False):
+    """One full pass: carried f32 accumulators over chunks, O(chunk + k·d)
+    resident. Returns (stats carry, idx (n,) np, best_sim (n,) np, objective)
+    — idx/best_sim None unless ``collect``."""
+    carry = ops.stats_identity(k, stream.dim)
+    idxs, sims = [], []
+    obj = jnp.float32(0.0)
+    for ch in stream.chunks():
+        carry, (idx, sim, o) = _stream_fold_chunk(
+            carry, jnp.asarray(ch.x), jnp.asarray(ch.w), centers, impl=impl
+        )
+        obj = obj + o
+        if collect:
+            idxs.append(np.asarray(idx))
+            sims.append(np.asarray(sim))
+    if not collect:
+        return carry, None, None, obj
+    return (
+        carry,
+        np.concatenate(idxs)[: stream.n],
+        np.concatenate(sims)[: stream.n],
+        obj,
+    )
+
+
+def kmeans_fit_stream(
+    stream,
+    init_centers: jax.Array,
+    k: int,
+    *,
+    max_iters: int = 8,
+    tol: float = 1e-4,
+    impl: str = "xla",
+) -> KMeansResult:
+    """Out-of-core ``kmeans_fit``: the host drives iterations, each iteration
+    is one streaming pass through the fused assign+stats kernel with carried
+    accumulators — peak residency O(chunk·d + k·d), any n.
+
+    Same convergence rule as the resident path (stop when max center movement
+    ≤ tol); assignment/best_sim come back as host arrays trimmed to real rows.
+    """
+    centers = init_centers
+    iters = 0
+    for _ in range(max_iters):
+        (sums, counts, _, _), _, _, _ = _stream_pass(stream, centers, k, impl)
+        means = sums / jnp.maximum(counts, 1.0)[:, None]
+        new_centers = jnp.where(counts[:, None] > 0, l2_normalize(means), centers)
+        moved = float(jnp.max(jnp.sum((new_centers - centers) ** 2, axis=1)))
+        centers = new_centers
+        iters += 1
+        if moved <= tol * tol:
+            break
+    # final assignment AND the RSS stats from the same streaming pass
+    (sums, counts, _, sumsq), idx, best_sim, obj = _stream_pass(
+        stream, centers, k, impl, collect=True
+    )
+    rss = metrics.rss_from_assignment_stats(sums, counts, jnp.sum(sumsq), k)
+    return KMeansResult(
+        centers=centers,
+        assignment=idx,
+        best_sim=best_sim,
+        rss=rss,
+        objective=obj,
+        iterations=jnp.int32(iters),
+    )
+
+
+def kmeans_stream(
+    stream,
+    k: int,
+    key: jax.Array,
+    *,
+    max_iters: int = 8,
+    tol: float = 1e-4,
+    impl: str = "xla",
+) -> KMeansResult:
+    """Streaming convenience entry: the paper's random-document init drawn by
+    the one-pass reservoir (exact uniform k-sample), then the streaming fit."""
+    from repro.core.sampling import reservoir_sample_stream
+
+    rows, _ = reservoir_sample_stream(stream, k, key)
+    return kmeans_fit_stream(
+        stream, l2_normalize(rows), k, max_iters=max_iters, tol=tol, impl=impl
     )

@@ -24,14 +24,19 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh
 
 from repro.common import l2_normalize
 from repro.core.bkc import join_to_groups
 from repro.core.hac import single_link_labels_boruvka
 from repro.core.microcluster import MicroClusters
-from repro.distrib.engine import make_job
-from repro.distrib.sharding import mesh_axis_size
+from repro.distrib.engine import make_fold_job, make_job
+from repro.distrib.sharding import (
+    check_stream_shardable,
+    mesh_axis_size,
+    shard_rows,
+)
 from repro.kernels import ops
 
 
@@ -145,6 +150,68 @@ def kmeans_distributed(
     )
 
 
+# ------------------------------------------------------- streaming K-Means
+
+
+def _fold_pass(job, mesh, axes, stream, centers, collect: bool):
+    """One streaming pass of the fold job: every chunk is sharded onto the
+    mesh on arrival, map+combine folds into the per-shard carry, and ONE
+    collective (finalize) closes the pass — the combiner discipline at
+    chunk-stream granularity."""
+    carry = None
+    idxs = []
+    for ch in stream.chunks():
+        data = {
+            "x": shard_rows(mesh, axes, jnp.asarray(ch.x)),
+            "w": shard_rows(mesh, axes, jnp.asarray(ch.w)),
+        }
+        carry, shard_outs = job.step(carry, data, {"centers": centers})
+        if collect:
+            idxs.append(np.asarray(shard_outs["idx"]))
+    out = job.finalize(carry)
+    idx = np.concatenate(idxs)[: stream.n] if collect else None
+    return out, idx
+
+
+def kmeans_distributed_stream(
+    mesh: Mesh,
+    axes: tuple[str, ...],
+    stream,
+    init_centers: jax.Array,
+    k: int,
+    *,
+    max_iters: int = 8,
+    tol: float = 1e-4,
+    impl: str = "xla",
+) -> DistClusterResult:
+    """Out-of-core PKMeans on the mesh: each iteration is one streaming fold
+    job — chunks are sharded on arrival, per-shard partials carry across
+    chunks, and the k·d stats cross the wire ONCE per pass instead of once
+    per chunk. Device residency is O(chunk·d / P + k·d) for any n."""
+    check_stream_shardable(stream, mesh, axes)
+    map_combine, kinds = _assign_stats_map(k, impl)
+    job = make_fold_job(mesh, axes, map_combine, kinds, name="kmeans_fold")
+
+    centers = init_centers
+    it = 0
+    for it in range(1, max_iters + 1):
+        out, _ = _fold_pass(job, mesh, axes, stream, centers, collect=False)
+        new_centers = _new_centers(out["sums"], out["counts"], centers)
+        moved = float(jnp.max(jnp.sum((new_centers - centers) ** 2, axis=1)))
+        centers = new_centers
+        if moved <= tol * tol:
+            break
+    # final assignment against the converged centers
+    out, idx = _fold_pass(job, mesh, axes, stream, centers, collect=True)
+    return DistClusterResult(
+        centers=centers,
+        assignment=idx,
+        rss=_rss(out["sums"], out["counts"], out["sq"]),
+        objective=out["obj"],
+        iterations=it,
+    )
+
+
 # ----------------------------------------------------------------- BKC
 
 
@@ -205,6 +272,68 @@ def bkc_distributed(
     return DistClusterResult(
         centers=centers,
         assignment=out["idx"],
+        rss=_rss(out["sums"], out["counts"], out["sq"]),
+        objective=out["obj"],
+        iterations=2,  # two full passes over the data
+    )
+
+
+def bkc_distributed_stream(
+    mesh: Mesh,
+    axes: tuple[str, ...],
+    stream,
+    init_centers: jax.Array,
+    big_k: int,
+    k: int,
+    *,
+    impl: str = "xla",
+) -> DistClusterResult:
+    """Out-of-core distributed BKC: jobs 1 and 3 are streaming fold jobs
+    (chunks sharded on arrival, one collective per pass); job 2 runs on the
+    replicated O(BigK·d) micro-cluster statistics exactly as the resident
+    path — only the two full passes over the collection ever touch chunks."""
+    from repro.core.bkc import _group_centers
+
+    check_stream_shardable(stream, mesh, axes)
+
+    # ---- job 1: micro-cluster statistics folded over the chunk stream (ONE
+    # fused kernel per shard per chunk, CF additivity as the chunk monoid)
+    def mc_map(data, bcast):
+        st = ops.assign_stats(data["x"], bcast["centers"], data["w"], impl=impl)
+        return {
+            "n": st.counts,
+            "cf1": st.sums,
+            "cf2": st.sumsq,
+            "min_sim": st.min_sim,
+        }
+
+    job1 = make_fold_job(
+        mesh,
+        axes,
+        mc_map,
+        {"n": "sum", "cf1": "sum", "cf2": "sum", "min_sim": "min"},
+        name="bkc_mc_fold",
+    )
+    stats, _ = _fold_pass(job1, mesh, axes, stream, init_centers, collect=False)
+
+    valid = stats["n"] > 0
+    mc = MicroClusters(
+        n=stats["n"],
+        cf1=stats["cf1"],
+        cf2=stats["cf2"],
+        centers=init_centers,
+        min_sim=jnp.where(valid, stats["min_sim"], 1.0),
+        valid=valid,
+    )
+    centers, _group, _thr = _group_centers(mc, k)
+
+    # ---- job 3: final assignment pass (streamed)
+    map_combine, kinds = _assign_stats_map(k, impl)
+    job3 = make_fold_job(mesh, axes, map_combine, kinds, name="bkc_final_fold")
+    out, idx = _fold_pass(job3, mesh, axes, stream, centers, collect=True)
+    return DistClusterResult(
+        centers=centers,
+        assignment=idx,
         rss=_rss(out["sums"], out["counts"], out["sq"]),
         objective=out["obj"],
         iterations=2,  # two full passes over the data

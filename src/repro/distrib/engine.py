@@ -139,3 +139,168 @@ def run_job(
 ) -> Any:
     """One-shot convenience wrapper around make_job."""
     return make_job(mesh, axes, map_combine, reduce_kinds, name=name)(data, bcast)
+
+
+# --------------------------------------------------------------- fold mode
+
+_MONOID: dict[str, Callable[[Any, Any], Any]] = {
+    "sum": jnp.add,
+    "min": jnp.minimum,
+    "max": jnp.maximum,
+}
+
+
+class FoldJob:
+    """Streaming fold mode of a MapReduce job (out-of-core chunk streams).
+
+    ``make_job`` maps ONE resident data pytree and reduces immediately;
+    a FoldJob consumes a SEQUENCE of same-shaped chunks:
+
+      step(carry, data_chunk, bcast) -> (carry, shard_outs)
+          map the chunk per shard and merge the monoid partials into the
+          per-shard carry LOCALLY — no collective touches the wire here.
+          ``carry=None`` starts a fold. 'shard'-kind outputs pass through
+          per chunk (sharded like the chunk rows); fold-kind positions in
+          ``shard_outs`` are None.
+      finalize(carry) -> out
+          ONE collective pass (psum/pmin/pmax) over the carried per-shard
+          partials. 'shard' positions in the result are None.
+
+    This is the paper's combiner discipline lifted across chunks: a mapper
+    folds every split it is handed before anything shuffles, so the wire cost
+    of an entire multi-chunk pass equals that of one resident job. Fold mode
+    supports 'sum' | 'min' | 'max' (+ 'shard' passthrough); 'gather' and
+    'component' have no chunk-monoid form.
+
+    The carry is a tuple of (P, ...) arrays sharded over ``axes`` — shard p's
+    running partial lives in slice p and never moves between devices until
+    finalize.
+    """
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        axes: tuple[str, ...],
+        map_combine: Callable,
+        reduce_kinds: Any,
+        *,
+        name: str = "fold",
+    ):
+        flat_kinds, kinds_def = jax.tree_util.tree_flatten(reduce_kinds)
+        bad = sorted({k for k in flat_kinds if k not in ("shard", *_MONOID)})
+        if bad:
+            raise ValueError(
+                f"fold mode supports sum/min/max/shard reduce kinds, got {bad}"
+            )
+        fold_kinds = [k for k in flat_kinds if k != "shard"]
+        self.name = name
+
+        def split(out):
+            parts = kinds_def.flatten_up_to(out)
+            folds = tuple(p for p, k in zip(parts, flat_kinds) if k != "shard")
+            shards = jax.tree_util.tree_unflatten(
+                kinds_def,
+                [p if k == "shard" else None for p, k in zip(parts, flat_kinds)],
+            )
+            return folds, shards
+
+        # kinds are a pytree PREFIX (same as make_job): each fold entry may
+        # cover a whole out subtree, so carries/merges tree_map over it
+        tmap = jax.tree_util.tree_map
+
+        def inner_first(data, bcast):
+            folds, shards = split(map_combine(data, bcast))
+            return tuple(tmap(lambda v: v[None], f) for f in folds), shards
+
+        def inner_step(carry, data, bcast):
+            folds, shards = split(map_combine(data, bcast))
+            carry = tuple(
+                tmap(lambda cv, fv, op=_MONOID[k]: op(cv[0], fv)[None], c, f)
+                for c, f, k in zip(carry, folds, fold_kinds)
+            )
+            return carry, shards
+
+        def inner_finalize(carry):
+            # psum-family collectives accept pytrees, so a subtree reduces whole
+            reduced = iter(
+                _REDUCERS[k](tmap(lambda cv: cv[0], c), axes)
+                for c, k in zip(carry, fold_kinds)
+            )
+            return jax.tree_util.tree_unflatten(
+                kinds_def,
+                [None if k == "shard" else next(reduced) for k in flat_kinds],
+            )
+
+        shard_specs = jax.tree_util.tree_unflatten(
+            kinds_def, [P(axes) if k == "shard" else None for k in flat_kinds]
+        )
+        carry_spec = tuple(P(axes) for _ in fold_kinds)
+
+        def data_specs(data, bcast):
+            return (
+                jax.tree_util.tree_map(lambda _: P(axes), data),
+                jax.tree_util.tree_map(lambda _: P(), bcast),
+            )
+
+        @jax.jit
+        def first(data, bcast):
+            f = shard_map(
+                inner_first,
+                mesh=mesh,
+                in_specs=data_specs(data, bcast),
+                out_specs=(carry_spec, shard_specs),
+                check_vma=False,
+            )
+            return f(data, bcast)
+
+        @jax.jit
+        def step(carry, data, bcast):
+            f = shard_map(
+                inner_step,
+                mesh=mesh,
+                in_specs=(carry_spec, *data_specs(data, bcast)),
+                out_specs=(carry_spec, shard_specs),
+                check_vma=False,
+            )
+            return f(carry, data, bcast)
+
+        @jax.jit
+        def finalize(carry):
+            f = shard_map(
+                inner_finalize,
+                mesh=mesh,
+                in_specs=(carry_spec,),
+                out_specs=jax.tree_util.tree_unflatten(
+                    kinds_def,
+                    [None if k == "shard" else P() for k in flat_kinds],
+                ),
+                check_vma=False,
+            )
+            return f(carry)
+
+        self._first, self._step, self._finalize = first, step, finalize
+
+    def step(self, carry, data, bcast):
+        """Fold one chunk; ``carry=None`` opens the fold."""
+        if carry is None:
+            return self._first(data, bcast)
+        return self._step(carry, data, bcast)
+
+    def finalize(self, carry):
+        """One collective pass over the carried per-shard partials."""
+        if carry is None:
+            raise ValueError("finalize before any step: empty stream")
+        return self._finalize(carry)
+
+
+def make_fold_job(
+    mesh: Mesh,
+    axes: tuple[str, ...],
+    map_combine: Callable,
+    reduce_kinds: Any,
+    *,
+    name: str = "fold",
+) -> FoldJob:
+    """Streaming fold mode: map each chunk, combine monoid partials locally,
+    one collective at the end (see FoldJob)."""
+    return FoldJob(mesh, axes, map_combine, reduce_kinds, name=name)

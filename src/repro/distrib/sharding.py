@@ -44,6 +44,16 @@ def mesh_axis_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
     return int(math.prod(mesh.shape[a] for a in axes))
 
 
+def check_stream_shardable(stream, mesh: Mesh, axes: tuple[str, ...]) -> None:
+    """Streaming entry points shard each fixed-size chunk on arrival; the
+    chunk row count must divide over the data shards."""
+    n_shards = mesh_axis_size(mesh, axes)
+    if stream.chunk % n_shards:
+        raise ValueError(
+            f"stream chunk {stream.chunk} must divide over {n_shards} shards"
+        )
+
+
 def pad_rows_to_multiple(
     x: np.ndarray | jax.Array, multiple: int
 ) -> tuple[Any, Any]:

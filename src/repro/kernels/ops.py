@@ -85,6 +85,31 @@ def assign_stats(
     )
 
 
+def stats_identity(k: int, d: int) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Monoid identity for the carried (sums, counts, min_sim, sumsq) fold —
+    the accumulator every streaming pass starts from."""
+    return (
+        jnp.zeros((k, d), jnp.float32),
+        jnp.zeros((k,), jnp.float32),
+        jnp.full((k,), ref.BIG, jnp.float32),
+        jnp.zeros((k,), jnp.float32),
+    )
+
+
+def merge_stats(
+    carry: tuple[jax.Array, jax.Array, jax.Array, jax.Array], st: "AssignStats"
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fold one chunk's AssignStats into the carried accumulators (the monoid
+    combine shared by assign_stats_chunked and every core streaming pass)."""
+    sums, counts, min_sim, sumsq = carry
+    return (
+        sums + st.sums,
+        counts + st.counts,
+        jnp.minimum(min_sim, st.min_sim),
+        sumsq + st.sumsq,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "impl"))
 def assign_stats_chunked(
     x: jax.Array,
@@ -115,24 +140,11 @@ def assign_stats_chunked(
     wb = wv.reshape(-1, chunk)
 
     def body(carry, blk):
-        sums, counts, min_sim, sumsq = carry
         st = assign_stats(blk["x"], centers, blk["w"], impl=impl)
-        carry = (
-            sums + st.sums,
-            counts + st.counts,
-            jnp.minimum(min_sim, st.min_sim),
-            sumsq + st.sumsq,
-        )
-        return carry, (st.idx, st.best_sim)
+        return merge_stats(carry, st), (st.idx, st.best_sim)
 
-    init = (
-        jnp.zeros((k, d), jnp.float32),
-        jnp.zeros((k,), jnp.float32),
-        jnp.full((k,), ref.BIG, jnp.float32),
-        jnp.zeros((k,), jnp.float32),
-    )
     (sums, counts, min_sim, sumsq), (idxs, sims) = jax.lax.scan(
-        body, init, {"x": xb, "w": wb}
+        body, stats_identity(k, d), {"x": xb, "w": wb}
     )
     return AssignStats(
         idx=idxs.reshape(-1)[:n],

@@ -1,1 +1,3 @@
-"""Text substrate: hashing vectorizer, tf-idf weighting, synthetic corpora."""
+"""Text substrate: hashing vectorizer, tf-idf weighting, synthetic corpora,
+and the out-of-core chunk stream (text/stream.CorpusStream) every layer above
+consumes for collections that don't fit in memory."""

@@ -48,3 +48,38 @@ def prepare_local(corpus: synth.Corpus) -> tuple[jax.Array, np.ndarray]:
     """Single-device path used by unit tests and the quickstart example."""
     x = tfidf.tfidf(jnp.asarray(corpus.counts))
     return x, corpus.labels
+
+
+class PreparedStream(NamedTuple):
+    x: object  # CorpusStream of L2-normalized tf-idf chunks
+    labels: np.ndarray  # (n,) ground truth (host)
+    n: int  # real document count
+
+
+def prepare_synthetic_stream(
+    *,
+    n_docs: int,
+    vocab: int = 2048,
+    n_topics: int = 20,
+    seed: int = 0,
+    chunk: int = 8192,
+    mesh: Mesh | None = None,
+    axes: tuple[str, ...] = ("data",),
+    **synth_kwargs,
+) -> PreparedStream:
+    """Out-of-core corpus preparation: generate -> streaming two-pass tf-idf.
+
+    Nothing (n, d)-sized ever exists: counts regenerate per chunk on each
+    pass and tf-idf rescaling happens per chunk on device. With ``mesh`` the
+    df/n pass runs as the engine fold job (one psum for the whole pass);
+    consumers shard each weighted chunk on arrival (e.g.
+    distrib.cluster.kmeans_distributed_stream)."""
+    counts_stream, labels = synth.stream_corpus(
+        n_docs, vocab=vocab, n_topics=n_topics, seed=seed, chunk=chunk,
+        **synth_kwargs,
+    )
+    if mesh is None:
+        x_stream = tfidf.tfidf_stream(counts_stream)
+    else:
+        x_stream = tfidf.tfidf_distributed_stream(mesh, axes, counts_stream)
+    return PreparedStream(x=x_stream, labels=labels, n=n_docs)

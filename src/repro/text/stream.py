@@ -1,0 +1,169 @@
+"""Out-of-core corpus streaming (DESIGN.md §10).
+
+The paper's MapReduce pipeline never holds the collection in one memory: splits
+stream through mappers. ``CorpusStream`` is that discipline for this repo —
+a RE-ITERABLE stream of fixed-shape ``(chunk, dim)`` host blocks plus per-row
+weights (1.0 real / 0.0 padding; only the last chunk is padded). Fixed shapes
+mean every jitted per-chunk op compiles exactly once, and re-iterability means
+multi-pass algorithms (two-pass tf-idf, K-Means iterations) recompute chunks
+instead of storing them: peak residency is O(chunk·d), never O(n·d).
+
+Consumers (core/kmeans, core/bkc, core/buckshot, distrib/cluster, text/tfidf)
+duck-type on ``.chunks()`` / ``.n`` / ``.dim`` / ``.chunk`` — nothing below
+``text/`` imports this module, so the layering stays acyclic. The resident
+paths are the one-chunk specialization: ``CorpusStream.from_array(x)`` yields
+the whole array as a single chunk, and every streaming entry point run on it
+reproduces the resident oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Iterable, Iterator, NamedTuple, Sequence
+
+import numpy as np
+
+
+class StreamChunk(NamedTuple):
+    """One fixed-shape block of the corpus.
+
+    ``x`` is a host numpy block for source streams; mapped streams (e.g.
+    tf-idf pass 2) may carry device arrays — every consumer is jit-traced per
+    chunk, so either works.
+    """
+
+    x: "np.ndarray"  # (chunk, dim) f32 rows (padding rows all-zero)
+    w: "np.ndarray"  # (chunk,) f32, 1.0 real / 0.0 padding
+    start: int  # global row index of this chunk's first row
+
+
+def _pad_block(block: np.ndarray, chunk: int) -> tuple[np.ndarray, np.ndarray]:
+    r = block.shape[0]
+    w = np.ones((r,), np.float32)
+    if r < chunk:
+        block = np.concatenate(
+            [block, np.zeros((chunk - r,) + block.shape[1:], block.dtype)]
+        )
+        w = np.concatenate([w, np.zeros((chunk - r,), np.float32)])
+    return block, w
+
+
+class CorpusStream:
+    """Re-iterable stream of fixed-shape corpus chunks.
+
+    ``make_chunks`` returns a FRESH iterator of ``StreamChunk`` on every call
+    (each pass over the stream regenerates the data — the out-of-core
+    contract). Use the constructors below instead of calling this directly.
+    """
+
+    def __init__(
+        self,
+        make_chunks: Callable[[], Iterator[StreamChunk]],
+        *,
+        n: int,
+        dim: int,
+        chunk: int,
+    ):
+        if chunk <= 0:
+            raise ValueError(f"chunk must be positive, got {chunk}")
+        self._make_chunks = make_chunks
+        self.n = int(n)
+        self.dim = int(dim)
+        self.chunk = int(chunk)
+
+    @property
+    def n_chunks(self) -> int:
+        return max(1, -(-self.n // self.chunk))
+
+    def chunks(self) -> Iterator[StreamChunk]:
+        """A fresh pass over the stream."""
+        return self._make_chunks()
+
+    # ------------------------------------------------------------ builders
+
+    @staticmethod
+    def from_blocks(
+        make_blocks: Callable[[], Iterable[np.ndarray]],
+        *,
+        n: int,
+        dim: int,
+        chunk: int,
+    ) -> "CorpusStream":
+        """Wrap a factory of raw row blocks (≤ chunk rows each, ``n`` total;
+        only the final block may be short). Pads each block to the fixed
+        chunk shape and threads the weights. The contract is ENFORCED — a
+        short mid-stream block would put pad rows in the middle of the
+        logical row order, which every consumer's tail-trim would silently
+        mis-read as real documents."""
+
+        def gen() -> Iterator[StreamChunk]:
+            start = 0
+            short_at = -1
+            for block in make_blocks():
+                r = block.shape[0]
+                if short_at >= 0:
+                    raise ValueError(
+                        f"short block ({short_at} rows) before the final one:"
+                        f" only the last block may have < {chunk} rows"
+                    )
+                if r > chunk:
+                    raise ValueError(f"block of {r} rows exceeds chunk {chunk}")
+                if r < chunk:
+                    short_at = r
+                x, w = _pad_block(np.asarray(block, np.float32), chunk)
+                yield StreamChunk(x=x, w=w, start=start)
+                start += r
+            if start != n:
+                raise ValueError(f"stream yielded {start} rows, declared n={n}")
+
+        return CorpusStream(gen, n=n, dim=dim, chunk=chunk)
+
+    @staticmethod
+    def from_array(x, *, chunk: int | None = None) -> "CorpusStream":
+        """Resident array -> stream. ``chunk=None`` keeps the whole array as
+        ONE chunk — the thin wrapper that makes every resident path a
+        one-chunk specialization of the streaming path."""
+        x = np.asarray(x, np.float32)
+        n, dim = x.shape
+        chunk = n if chunk is None else chunk
+
+        def blocks() -> Iterator[np.ndarray]:
+            for start in range(0, n, chunk):
+                yield x[start : start + chunk]
+
+        return CorpusStream.from_blocks(blocks, n=n, dim=dim, chunk=chunk)
+
+    @staticmethod
+    def from_texts(
+        texts: Sequence[str], *, dim: int = 2048, chunk: int = 4096
+    ) -> "CorpusStream":
+        """Chunked hashing ingest: texts -> (chunk, dim) unsigned hashed token
+        count blocks (text/hashing.vectorize_chunks)."""
+        from repro.text import hashing
+
+        return CorpusStream.from_blocks(
+            lambda: hashing.vectorize_chunks(texts, dim, chunk=chunk),
+            n=len(texts),
+            dim=dim,
+            chunk=chunk,
+        )
+
+    # ------------------------------------------------------------ transforms
+
+    def map(self, fn: Callable, *, dim: int | None = None) -> "CorpusStream":
+        """Lazily transform every chunk: ``fn(x, w) -> x'`` (same row count;
+        fn is applied per chunk on arrival, e.g. the tf-idf pass-2 rescale
+        running jitted on device)."""
+
+        def gen() -> Iterator[StreamChunk]:
+            for ch in self.chunks():
+                yield ch._replace(x=fn(ch.x, ch.w))
+
+        return CorpusStream(
+            gen, n=self.n, dim=self.dim if dim is None else dim, chunk=self.chunk
+        )
+
+    def materialize(self) -> np.ndarray:
+        """Concatenate the stream back into a resident (n, dim) array —
+        tests/oracles only; defeats the point everywhere else."""
+        parts = [np.asarray(ch.x) for ch in self.chunks()]
+        return np.concatenate(parts, axis=0)[: self.n]

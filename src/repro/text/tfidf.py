@@ -3,7 +3,14 @@ based on the vector space model representation with tf-idf weights').
 
 Single-device entry point plus the distributed document-frequency job: df is a
 per-shard partial sum psum'd across the data axes (another instance of the
-combiner discipline — the reduce payload is (d,) not (n,d))."""
+combiner discipline — the reduce payload is (d,) not (n,d)).
+
+Streaming (out-of-core) form is TWO passes over a ``text/stream.CorpusStream``:
+pass 1 folds (df, n) over chunks — locally on one device, or through the
+engine's fold job on a mesh (one psum for the whole pass) — and pass 2 is a
+lazily-mapped stream that rescales + L2-normalizes each chunk on device as it
+arrives. df and n are integer-valued, so the chunked f32 fold is EXACT and the
+streamed rows are bit-identical to the resident ``tfidf``."""
 
 from __future__ import annotations
 
@@ -14,7 +21,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.common import l2_normalize
-from repro.distrib.engine import make_job
+from repro.distrib.engine import make_fold_job, make_job
 
 
 @jax.jit
@@ -43,6 +50,20 @@ def tfidf(counts: jax.Array) -> jax.Array:
     return l2_normalize(x)
 
 
+def _df_map(data, bcast):
+    """Shared map+combine for the (df, n) job: per-shard weighted presence."""
+    del bcast
+    c, ws = data["counts"], data["w"]
+    present = (c > 0).astype(jnp.float32) * ws[:, None]
+    return {"df": jnp.sum(present, axis=0), "n": jnp.sum(ws)}
+
+
+@jax.jit
+def _rescale(c, df, n):
+    x = tf_weight(c) * idf_weight(df, n)
+    return l2_normalize(jnp.maximum(x, 0.0))
+
+
 def tfidf_distributed(
     mesh: Mesh,
     axes: tuple[str, ...],
@@ -52,19 +73,63 @@ def tfidf_distributed(
     """Distributed tf-idf: one MapReduce job for (df, n), then a local rescale.
 
     counts rows sharded over `axes`; padding rows have w == 0."""
-
-    def df_map(data, bcast):
-        del bcast
-        c, ws = data["counts"], data["w"]
-        present = (c > 0).astype(jnp.float32) * ws[:, None]
-        return {"df": jnp.sum(present, axis=0), "n": jnp.sum(ws)}
-
-    job = make_job(mesh, axes, df_map, {"df": "sum", "n": "sum"}, name="tfidf_df")
+    job = make_job(mesh, axes, _df_map, {"df": "sum", "n": "sum"}, name="tfidf_df")
     stats = job({"counts": counts, "w": w}, {})
+    return _rescale(counts, stats["df"], stats["n"])
 
-    @jax.jit
-    def rescale(c, df, n):
-        x = tf_weight(c) * idf_weight(df, n)
-        return l2_normalize(jnp.maximum(x, 0.0))
 
-    return rescale(counts, stats["df"], stats["n"])
+# ------------------------------------------------------------------ streaming
+
+
+def df_stream(stream) -> tuple[jax.Array, jax.Array]:
+    """Pass 1 over a count-chunk stream: fold (df (d,), n) — exact, since
+    both are integer-valued however the chunks split the rows."""
+    df = n = None
+    for ch in stream.chunks():
+        part = _df_map({"counts": jnp.asarray(ch.x), "w": jnp.asarray(ch.w)}, ())
+        if df is None:
+            df, n = part["df"], part["n"]
+        else:
+            df, n = df + part["df"], n + part["n"]
+    if df is None:
+        raise ValueError("df_stream: empty stream")
+    return df, n
+
+
+def tfidf_stream(stream):
+    """Streaming two-pass tf-idf: (df, n) fold, then a lazily-mapped stream
+    whose chunks are rescaled + L2-normalized on device on arrival.
+
+    Bit-exact vs resident ``tfidf``: pass 1 folds integers, pass 2 applies
+    the identical elementwise rescale per chunk. Peak residency O(chunk·d)."""
+    df, n = df_stream(stream)
+    return stream.map(lambda c, w: _rescale(jnp.asarray(c), df, n))
+
+
+def df_fold_distributed(mesh, axes, stream) -> dict:
+    """Distributed pass 1: the engine fold job — every chunk is mapped and
+    combined per shard, ONE psum closes the pass (not one per chunk)."""
+    from repro.distrib.sharding import check_stream_shardable, shard_rows
+
+    check_stream_shardable(stream, mesh, axes)
+    job = make_fold_job(
+        mesh, axes, _df_map, {"df": "sum", "n": "sum"}, name="tfidf_df_fold"
+    )
+    carry = None
+    for ch in stream.chunks():
+        data = {
+            "counts": shard_rows(mesh, axes, jnp.asarray(ch.x)),
+            "w": shard_rows(mesh, axes, jnp.asarray(ch.w)),
+        }
+        carry, _ = job.step(carry, data, {})
+    return job.finalize(carry)
+
+
+def tfidf_distributed_stream(mesh, axes, stream):
+    """Streaming distributed tf-idf: fold-job pass 1, per-chunk rescale pass 2.
+
+    Returns a mapped stream; consumers (distrib.cluster streaming jobs) shard
+    each rescaled chunk onto the mesh as it arrives."""
+    stats = df_fold_distributed(mesh, axes, stream)
+    df, n = stats["df"], stats["n"]
+    return stream.map(lambda c, w: _rescale(jnp.asarray(c), df, n))

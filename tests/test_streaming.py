@@ -1,0 +1,448 @@
+"""Out-of-core streaming parity (DESIGN.md §10).
+
+The streaming paths must reproduce the resident oracles:
+  - streaming two-pass tf-idf is BIT-EXACT vs one-shot ``tfidf.tfidf``
+    (df and n are integer-valued, pass 2 is elementwise per chunk);
+  - the streaming stats fold is BIT-EXACT under re-chunking on integer-valued
+    data (the repo's accumulation-order convention, cf. test_kernels);
+  - streaming K-Means/BKC/Buckshot ASSIGNMENTS are identical to the resident
+    paths on the same synth corpus, with centers/RSS at f32-ulp tolerance
+    (two different XLA programs may fuse the f32 center update differently);
+  - the reservoir sample equals the direct global top-s oracle exactly.
+
+Multi-device variants run in subprocesses (the main pytest process keeps one
+device), mirroring test_distributed.py.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common import l2_normalize
+from repro.core.bkc import bkc_fit, bkc_fit_stream
+from repro.core.buckshot import buckshot_fit, buckshot_stream
+from repro.core.kmeans import (
+    init_random_centers,
+    kmeans_fit,
+    kmeans_fit_stream,
+)
+from repro.core.sampling import reservoir_sample_stream
+from repro.kernels import ops
+from repro.text import synth, tfidf
+from repro.text.stream import CorpusStream
+
+ENV = dict(
+    os.environ,
+    XLA_FLAGS="--xla_force_host_platform_device_count=4",
+    PYTHONPATH="src",
+    JAX_PLATFORMS="cpu",
+)
+
+
+def _run(code: str, timeout: int = 600) -> str:
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=ENV,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    c = synth.make_corpus(800, vocab=256, n_topics=8, seed=3)
+    x = tfidf.tfidf(jnp.asarray(c.counts))
+    return c, x
+
+
+def _x_stream(chunk=128):
+    st, _ = synth.stream_corpus(800, vocab=256, n_topics=8, seed=3, chunk=chunk)
+    return tfidf.tfidf_stream(st)
+
+
+# ------------------------------------------------------------------ stream
+
+
+def test_stream_chunks_fixed_shape_and_reassemble(corpus):
+    c, _ = corpus
+    st, labels = synth.stream_corpus(
+        800, vocab=256, n_topics=8, seed=3, chunk=96
+    )
+    np.testing.assert_array_equal(labels, c.labels)
+    total_w = 0.0
+    for ch in st.chunks():
+        assert ch.x.shape == (96, 256) and ch.w.shape == (96,)
+        assert ((ch.w == 0) | (ch.w == 1)).all()
+        assert (ch.x[ch.w == 0] == 0).all()  # padding rows are all-zero
+        total_w += float(ch.w.sum())
+    assert total_w == 800
+    np.testing.assert_array_equal(st.materialize(), c.counts)
+
+
+def test_stream_synth_bit_identical_any_chunk(corpus):
+    c, _ = corpus
+    for chunk in (800, 127, 1024):
+        st, _ = synth.stream_corpus(
+            800, vocab=256, n_topics=8, seed=3, chunk=chunk
+        )
+        np.testing.assert_array_equal(st.materialize(), c.counts)
+
+
+def test_stream_from_array_one_chunk_wrapper(corpus):
+    c, _ = corpus
+    st = CorpusStream.from_array(c.counts)
+    assert st.n_chunks == 1 and st.chunk == 800
+    np.testing.assert_array_equal(st.materialize(), c.counts)
+
+
+def test_stream_from_blocks_enforces_contract():
+    """A short mid-stream block or a row-count mismatch must raise, not
+    silently pad the middle of the logical row order."""
+
+    def bad_mid(blocks):
+        st = CorpusStream.from_blocks(
+            lambda: iter(blocks), n=sum(b.shape[0] for b in blocks),
+            dim=4, chunk=8,
+        )
+        with pytest.raises(ValueError):
+            st.materialize()
+
+    z = lambda r: np.zeros((r, 4), np.float32)
+    bad_mid([z(3), z(8)])  # short block before the final one
+    bad_mid([z(12)])  # block exceeds chunk
+    st = CorpusStream.from_blocks(lambda: iter([z(8), z(3)]), n=20, dim=4, chunk=8)
+    with pytest.raises(ValueError, match="declared n"):
+        st.materialize()
+    # the legal shape: full blocks then one short tail
+    ok = CorpusStream.from_blocks(lambda: iter([z(8), z(3)]), n=11, dim=4, chunk=8)
+    assert ok.materialize().shape == (11, 4)
+
+
+def test_stream_reiterable(corpus):
+    """Two passes over the same stream see identical chunks (the two-pass
+    tf-idf / multi-iteration K-Means contract)."""
+    st, _ = synth.stream_corpus(800, vocab=256, n_topics=8, seed=3, chunk=256)
+    a = st.materialize()
+    b = st.materialize()
+    np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------------------ tf-idf
+
+
+def test_tfidf_stream_bit_exact(corpus):
+    c, x = corpus
+    for chunk in (128, 250, 800):
+        st, _ = synth.stream_corpus(
+            800, vocab=256, n_topics=8, seed=3, chunk=chunk
+        )
+        got = tfidf.tfidf_stream(st).materialize()
+        np.testing.assert_array_equal(got, np.asarray(x))
+
+
+def test_df_stream_matches_resident(corpus):
+    c, _ = corpus
+    st, _ = synth.stream_corpus(800, vocab=256, n_topics=8, seed=3, chunk=200)
+    df, n = tfidf.df_stream(st)
+    np.testing.assert_array_equal(
+        np.asarray(df), np.asarray(tfidf.document_frequency(jnp.asarray(c.counts)))
+    )
+    assert float(n) == 800.0
+
+
+# ------------------------------------------------------------------ fold
+
+
+def test_stream_stats_fold_bitexact_integer_data():
+    """Chunked streaming fold == one-shot fused stats, bit for bit (integer
+    data makes every accumulation order exact; includes a non-divisible
+    chunk so the padded tail is exercised)."""
+    from repro.core.kmeans import _stream_pass
+
+    rng = np.random.default_rng(0)
+    x = rng.integers(-8, 9, size=(1000, 33)).astype(np.float32)
+    c = jnp.asarray(rng.integers(-8, 9, size=(11, 33)).astype(np.float32))
+    one = ops.assign_stats(jnp.asarray(x), c)
+    for chunk in (256, 250, 1000):
+        st = CorpusStream.from_array(x, chunk=chunk)
+        (sums, counts, min_sim, sumsq), idx, sim, _ = _stream_pass(
+            st, c, 11, "xla", collect=True
+        )
+        np.testing.assert_array_equal(np.asarray(one.sums), np.asarray(sums))
+        np.testing.assert_array_equal(np.asarray(one.counts), np.asarray(counts))
+        np.testing.assert_array_equal(np.asarray(one.min_sim), np.asarray(min_sim))
+        np.testing.assert_array_equal(np.asarray(one.sumsq), np.asarray(sumsq))
+        np.testing.assert_array_equal(np.asarray(one.idx), idx)
+        np.testing.assert_array_equal(np.asarray(one.best_sim), sim)
+
+
+# ------------------------------------------------------------------ k-means
+
+
+def test_kmeans_stream_matches_resident(corpus):
+    c, x = corpus
+    init = init_random_centers(jax.random.PRNGKey(0), x, 8)
+    res = kmeans_fit(x, init, 8, max_iters=8)
+    sres = kmeans_fit_stream(_x_stream(), init, 8, max_iters=8)
+    assert int(res.iterations) == int(sres.iterations)
+    np.testing.assert_array_equal(np.asarray(res.assignment), sres.assignment)
+    np.testing.assert_allclose(
+        np.asarray(res.centers), np.asarray(sres.centers), rtol=1e-5, atol=1e-7
+    )
+    np.testing.assert_allclose(float(res.rss), float(sres.rss), rtol=1e-5)
+    np.testing.assert_allclose(
+        float(res.objective), float(sres.objective), rtol=1e-5
+    )
+
+
+def test_kmeans_stream_one_chunk_is_resident(corpus):
+    """The resident path is the one-chunk specialization of the stream."""
+    c, x = corpus
+    init = init_random_centers(jax.random.PRNGKey(0), x, 8)
+    res = kmeans_fit(x, init, 8, max_iters=8)
+    sres = kmeans_fit_stream(
+        CorpusStream.from_array(np.asarray(x)), init, 8, max_iters=8
+    )
+    np.testing.assert_array_equal(np.asarray(res.assignment), sres.assignment)
+    np.testing.assert_allclose(
+        np.asarray(res.centers), np.asarray(sres.centers), rtol=1e-6
+    )
+
+
+# ------------------------------------------------------------------ bkc
+
+
+def test_bkc_stream_matches_resident(corpus):
+    c, x = corpus
+    cidx = jax.random.choice(
+        jax.random.PRNGKey(0), x.shape[0], shape=(64,), replace=False
+    )
+    centers0 = l2_normalize(x[cidx])
+    res = bkc_fit(x, centers0, 64, 8)
+    sres = bkc_fit_stream(_x_stream(), centers0, 64, 8)
+    np.testing.assert_array_equal(np.asarray(res.assignment), sres.assignment)
+    np.testing.assert_array_equal(
+        np.asarray(res.group_of_mc), np.asarray(sres.group_of_mc)
+    )
+    np.testing.assert_allclose(float(res.rss), float(sres.rss), rtol=1e-5)
+    np.testing.assert_allclose(
+        float(res.threshold), float(sres.threshold), rtol=1e-5, atol=1e-12
+    )
+
+
+# ------------------------------------------------------------------ sampling
+
+
+def test_reservoir_equals_global_top_s_oracle(corpus):
+    """Running top-s over chunks == direct top-s of ALL per-row scores, and
+    the returned rows are exactly the corpus rows at those indices."""
+    c, x = corpus
+    key = jax.random.PRNGKey(7)
+    xs = _x_stream(chunk=96)
+    rows, gidx = reservoir_sample_stream(xs, 50, key)
+    scores = []
+    for ci, ch in enumerate(xs.chunks()):
+        u = np.asarray(jax.random.uniform(jax.random.fold_in(key, ci), (96,)))
+        scores.append(np.where(np.asarray(ch.w) > 0, u, -1.0))
+    want = np.argsort(-np.concatenate(scores)[:800])[:50]
+    np.testing.assert_array_equal(np.sort(gidx), np.sort(want))
+    np.testing.assert_array_equal(np.asarray(rows), np.asarray(x)[gidx])
+
+
+def test_reservoir_rejects_oversample():
+    st = CorpusStream.from_array(np.zeros((10, 4), np.float32))
+    with pytest.raises(ValueError):
+        reservoir_sample_stream(st, 11, jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------------------ buckshot
+
+
+def test_buckshot_stream_matches_resident_fit(corpus):
+    """Streaming Buckshot == resident buckshot_fit handed the SAME sample
+    (the reservoir indices), end to end: phase-1 labels bit-equal,
+    assignments identical."""
+    c, x = corpus
+    bs = buckshot_stream(_x_stream(), 8, jax.random.PRNGKey(0), kmeans_iters=3)
+    res = buckshot_fit(x, jnp.asarray(bs.sample_idx), 8, kmeans_iters=3)
+    np.testing.assert_array_equal(
+        np.asarray(res.sample_labels), np.asarray(bs.sample_labels)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.kmeans.assignment), bs.kmeans.assignment
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.init_centers), np.asarray(bs.init_centers),
+        rtol=1e-5, atol=1e-7,
+    )
+    np.testing.assert_allclose(
+        float(res.kmeans.rss), float(bs.kmeans.rss), rtol=1e-5
+    )
+
+
+# ------------------------------------------------------------- multi-device
+
+
+def test_fold_job_matches_resident_job_4dev():
+    """Engine fold mode: chunked fold + ONE collective == resident make_job
+    on the concatenated data (sum/min/max and per-chunk shard passthrough)."""
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.distrib.engine import make_fold_job, make_job
+    from repro.distrib.sharding import make_flat_mesh, shard_rows
+
+    mesh = make_flat_mesh(4)
+    x = jnp.arange(64, dtype=jnp.float32).reshape(64, 1) - 17.0
+
+    def mc(data, bcast):
+        v = data["x"]
+        return {"sum": jnp.sum(v), "min": jnp.min(v), "max": jnp.max(v),
+                "rows": v * 2.0}
+
+    kinds = {"sum": "sum", "min": "min", "max": "max", "rows": "shard"}
+    res = make_job(mesh, ("data",), mc, kinds)(
+        {"x": shard_rows(mesh, ("data",), x)}, {})
+    fold = make_fold_job(mesh, ("data",), mc, kinds)
+    carry, rows = None, []
+    for start in range(0, 64, 16):
+        chunk = shard_rows(mesh, ("data",), x[start:start + 16])
+        carry, so = fold.step(carry, {"x": chunk}, {})
+        rows.append(np.asarray(so["rows"]))
+    out = fold.finalize(carry)
+    assert float(out["sum"]) == float(res["sum"])
+    assert float(out["min"]) == float(res["min"])
+    assert float(out["max"]) == float(res["max"])
+    assert out["rows"] is None
+    np.testing.assert_array_equal(np.concatenate(rows), np.asarray(res["rows"]))
+    print("FOLD OK")
+    """)
+
+
+def test_fold_job_prefix_subtree_kinds_4dev():
+    """A fold kind may cover a whole out SUBTREE (the engine's pytree-prefix
+    contract, same as make_job): the carry/merge/finalize must tree_map."""
+    _run("""
+    import numpy as np, jax.numpy as jnp
+    from repro.distrib.engine import make_fold_job
+    from repro.distrib.sharding import make_flat_mesh, shard_rows
+
+    mesh = make_flat_mesh(4)
+    x = jnp.arange(32, dtype=jnp.float32).reshape(32, 1)
+
+    def mc(data, bcast):
+        v = data["x"]
+        return {"stats": {"a": jnp.sum(v), "b": jnp.sum(v * v)}}
+
+    fold = make_fold_job(mesh, ("data",), mc, {"stats": "sum"})
+    carry = None
+    for start in range(0, 32, 8):
+        chunk = shard_rows(mesh, ("data",), x[start:start + 8])
+        carry, _ = fold.step(carry, {"x": chunk}, {})
+    out = fold.finalize(carry)
+    assert float(out["stats"]["a"]) == float(x.sum())
+    assert float(out["stats"]["b"]) == float((x * x).sum())
+    print("PREFIX FOLD OK")
+    """)
+
+
+def test_fold_job_rejects_gather_kind():
+    from repro.distrib.engine import make_fold_job
+    from repro.distrib.sharding import make_flat_mesh
+
+    with pytest.raises(ValueError, match="fold mode"):
+        make_fold_job(
+            make_flat_mesh(1), ("data",), lambda d, b: d, {"x": "gather"}
+        )
+
+
+def test_distributed_streaming_tfidf_bit_exact_4dev():
+    _run("""
+    import numpy as np, jax.numpy as jnp
+    from repro.distrib.sharding import make_flat_mesh
+    from repro.text import synth, tfidf
+
+    mesh = make_flat_mesh(4)
+    c = synth.make_corpus(203, vocab=64, n_topics=4, seed=2)  # non-divisible n
+    local = np.asarray(tfidf.tfidf(jnp.asarray(c.counts)))
+    st, _ = synth.stream_corpus(203, vocab=64, n_topics=4, seed=2, chunk=40)
+    got = tfidf.tfidf_distributed_stream(mesh, ("data",), st).materialize()
+    np.testing.assert_array_equal(got, local)
+    print("TFIDF STREAM OK")
+    """)
+
+
+def test_distributed_streaming_bkc_matches_resident_4dev():
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.common import l2_normalize
+    from repro.distrib.cluster import bkc_distributed, bkc_distributed_stream
+    from repro.distrib.sharding import (
+        make_flat_mesh, pad_rows_to_multiple, shard_rows)
+    from repro.text import synth, tfidf
+
+    mesh = make_flat_mesh(4)
+    c = synth.make_corpus(400, vocab=128, n_topics=6, seed=4)
+    x = tfidf.tfidf(jnp.asarray(c.counts))
+    cidx = jax.random.choice(
+        jax.random.PRNGKey(2), x.shape[0], shape=(32,), replace=False)
+    init = l2_normalize(x[cidx])
+
+    xp, w = pad_rows_to_multiple(x, 4)
+    res = bkc_distributed(
+        mesh, ("data",), shard_rows(mesh, ("data",), xp),
+        shard_rows(mesh, ("data",), w), init, 32, 6)
+
+    st, _ = synth.stream_corpus(400, vocab=128, n_topics=6, seed=4, chunk=80)
+    sres = bkc_distributed_stream(
+        mesh, ("data",), tfidf.tfidf_stream(st), init, 32, 6)
+    np.testing.assert_array_equal(
+        np.asarray(res.assignment)[:400], sres.assignment)
+    np.testing.assert_allclose(
+        np.asarray(res.centers), np.asarray(sres.centers),
+        rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(float(res.rss), float(sres.rss), rtol=1e-5)
+    print("BKC STREAM OK")
+    """)
+
+
+def test_distributed_streaming_kmeans_matches_resident_4dev():
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core.kmeans import init_random_centers
+    from repro.distrib.cluster import (
+        kmeans_distributed, kmeans_distributed_stream)
+    from repro.distrib.sharding import (
+        make_flat_mesh, pad_rows_to_multiple, shard_rows)
+    from repro.text import synth, tfidf
+
+    mesh = make_flat_mesh(4)
+    c = synth.make_corpus(400, vocab=128, n_topics=6, seed=4)
+    x = tfidf.tfidf(jnp.asarray(c.counts))
+    init = init_random_centers(jax.random.PRNGKey(1), x, 6)
+
+    xp, w = pad_rows_to_multiple(x, 4)
+    res = kmeans_distributed(
+        mesh, ("data",), shard_rows(mesh, ("data",), xp),
+        shard_rows(mesh, ("data",), w), init, 6, max_iters=5)
+
+    st, _ = synth.stream_corpus(400, vocab=128, n_topics=6, seed=4, chunk=80)
+    sres = kmeans_distributed_stream(
+        mesh, ("data",), tfidf.tfidf_stream(st), init, 6, max_iters=5)
+    assert res.iterations == sres.iterations
+    np.testing.assert_array_equal(
+        np.asarray(res.assignment)[:400], sres.assignment)
+    np.testing.assert_allclose(
+        np.asarray(res.centers), np.asarray(sres.centers),
+        rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(float(res.rss), float(sres.rss), rtol=1e-5)
+    print("KMEANS STREAM OK")
+    """)

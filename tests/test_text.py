@@ -80,6 +80,39 @@ def test_tokenize_lowercases_and_splits():
     assert hashing.tokenize("Hello, World-2!") == ["hello", "world", "2"]
 
 
+def test_hashing_collision_counts_unsigned():
+    """Regression for the signed-hashing bias: 'a' and 'b' hash with opposite
+    signs, so with dim=1 (forced collision) the old ``abs(sum of signs)``
+    scheme cancelled them to 0 instead of counting 2. Unsigned buckets must
+    count every token."""
+    _, sign_a = hashing.hash_token("a", 1)
+    _, sign_b = hashing.hash_token("b", 1)
+    assert sign_a != sign_b  # the collision the old scheme destroyed
+    v = hashing.vectorize(["a b", "a a b b b"], dim=1)
+    np.testing.assert_array_equal(v, [[2.0], [5.0]])
+
+
+def test_hashing_counts_match_per_token_oracle():
+    """Batched np.add.at path == explicit per-token unsigned accumulation."""
+    texts = ["the quick brown fox the fox", "", "a b c a b a"]
+    dim = 32
+    want = np.zeros((len(texts), dim), np.float32)
+    for i, t in enumerate(texts):
+        for tok in hashing.tokenize(t):
+            want[i, hashing.hash_token(tok, dim)[0]] += 1.0
+    np.testing.assert_array_equal(hashing.vectorize(texts, dim=dim), want)
+
+
+def test_hashing_chunked_matches_oneshot():
+    texts = [f"doc {i} token{i % 7} token{i % 3}" for i in range(23)]
+    one = hashing.vectorize(texts, dim=64)
+    for chunk in (1, 5, 23, 64):
+        blocks = list(hashing.vectorize_chunks(texts, 64, chunk=chunk))
+        assert all(b.shape[0] <= chunk for b in blocks)
+        np.testing.assert_array_equal(np.concatenate(blocks), one)
+    assert hashing.vectorize([], dim=16).shape == (0, 16)
+
+
 # ------------------------------------------------------------------ synth
 
 
