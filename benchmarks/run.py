@@ -22,6 +22,8 @@ Environment:
   BENCH_SCALE   float, scales n for the '1GB' tables (default 0.08 -> n=20k;
                 1.0 reproduces the paper's n=250k — minutes on CPU)
   BENCH_SMALL   set to 1 to shrink the 20NG tables 4x (CI mode)
+  BENCH_REPS    timed() samples per row; the BEST of N is recorded
+                (default 3 — single samples flip winners under load)
   BENCH_JSON    path: also write machine-readable results (same as --json)
 
 CLI:
@@ -70,13 +72,22 @@ def row(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
 
 
+REPS = max(1, int(os.environ.get("BENCH_REPS", "3")))
+
+
 def timed(fn: Callable, *args, **kw):
+    """Best-of-REPS wall time (default 3, env BENCH_REPS): a single sample
+    flips winners under concurrent machine load, min-of-N is the standard
+    de-noiser the bench_diff gate expects."""
     out = fn(*args, **kw)  # warmup & compile
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    out = fn(*args, **kw)
-    jax.block_until_ready(out)
-    return out, (time.perf_counter() - t0) * 1e6
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return out, best
 
 
 _CORPora: dict = {}
@@ -450,10 +461,16 @@ def stream_oocore():
     ``ru_maxrss`` measures exactly this workload's peak host residency.
 
     The stream regenerates chunks per pass (deterministic per-chunk rng), so
-    the child's peak RSS is O(chunk·d + s·d + k·d) however large n·d is —
-    the row records wall clock, peak RSS, and the dense bytes never
-    materialized. Non-SMALL reproduces the ISSUE shape: n = 1M, d = 2048 in
-    64 chunks (8 GiB dense f32, streamed at 128 MiB/chunk)."""
+    the child's peak RSS is O(chunk·d + s·d + k·d) however large n·d is.
+    The prefetch ON and OFF runs live in SEPARATE subprocesses (ru_maxrss is
+    a process-lifetime high-water mark — one process would smear the ON
+    buffers into the OFF reading), each paying a discarded warmup run first
+    so the timed pair is compile-free. The OFF child also times one
+    serialized pass over the mapped tf-idf stream — the per-pass
+    producer-side cost (chunk regeneration + per-chunk rescale dispatch)
+    that the prefetcher moves off the critical path; with it the overlap
+    win is attributable. Non-SMALL reproduces the ISSUE shape: n = 1M,
+    d = 2048 in 64 chunks (8 GiB dense f32, streamed at 128 MiB/chunk)."""
     import subprocess
     import sys
     import textwrap
@@ -462,55 +479,111 @@ def stream_oocore():
         (131_072, 512, 16, 8) if SMALL else (1_048_576, 2048, 64, 16)
     )
     chunk = n // chunks
-    child = textwrap.dedent(f"""
-        import os, resource, time
-        os.environ.setdefault("JAX_PLATFORMS", "cpu")
-        import jax, numpy as np
-        from repro.core.buckshot import buckshot_stream
-        from repro.text.stream import CorpusStream
-        from repro.text import tfidf
-
-        n, d, chunk, k = {n}, {d}, {chunk}, {k}
-
-        def blocks():
-            # deterministic per-chunk synthetic counts, vectorized: every
-            # pass over the stream regenerates (recompute over store).
-            # Thresholding keeps ~16% term density so idf stays positive
-            # (a dense matrix would put every term in every doc -> idf 0).
-            for ci in range(n // chunk):
-                rng = np.random.default_rng(1000 + ci)
-                z = rng.standard_normal((chunk, d), dtype=np.float32)
-                yield np.maximum(z - 1.0, 0.0)
-
-        counts = CorpusStream.from_blocks(blocks, n=n, dim=d, chunk=chunk)
-        t0 = time.perf_counter()
-        xs = tfidf.tfidf_stream(counts)       # pass 1 fold + lazy pass 2
-        res = buckshot_stream(xs, k, jax.random.PRNGKey(0), kmeans_iters=2)
-        jax.block_until_ready(res.kmeans.centers)
-        wall = time.perf_counter() - t0
-        peak_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
-        print(f"RESULT wall_us={{wall * 1e6:.1f}} peak_rss_mb={{peak_mb:.1f}}"
-              f" rss={{float(res.kmeans.rss):.2f}}")
-    """)
-    env = dict(os.environ, JAX_PLATFORMS="cpu")
-    env.setdefault("PYTHONPATH", "src")
-    out = subprocess.run(
-        [sys.executable, "-c", child], capture_output=True, text=True,
-        timeout=7200, env=env,
-    )
-    if out.returncode != 0:
-        print(f"# stream_oocore: subprocess failed\n{out.stderr}")
-        return
     got = {}
-    for line in out.stdout.splitlines():
-        if line.startswith("RESULT "):
-            got = dict(kv.split("=", 1) for kv in line.split()[1:])
+    for mode in ("0", "2"):
+        child = textwrap.dedent(f"""
+            import os, resource, time
+            os.environ.setdefault("JAX_PLATFORMS", "cpu")
+            os.environ["REPRO_STREAM_PREFETCH"] = "{mode}"
+            import jax, numpy as np
+            from repro.core.buckshot import buckshot_stream
+            from repro.text.stream import CorpusStream
+            from repro.text import tfidf
+
+            n, d, chunk, k, iters = {n}, {d}, {chunk}, {k}, 2
+
+            def blocks():
+                # deterministic per-chunk synthetic counts, vectorized: every
+                # pass over the stream regenerates (recompute over store).
+                # Thresholding keeps ~16% term density so idf stays positive
+                # (a dense matrix would put every term in every doc -> idf 0).
+                for ci in range(n // chunk):
+                    rng = np.random.default_rng(1000 + ci)
+                    z = rng.standard_normal((chunk, d), dtype=np.float32)
+                    yield np.maximum(z - 1.0, 0.0)
+
+            counts = CorpusStream.from_blocks(blocks, n=n, dim=d, chunk=chunk)
+
+            def pipeline():
+                xs = tfidf.tfidf_stream(counts)  # pass 1 fold + lazy pass 2
+                res = buckshot_stream(
+                    xs, k, jax.random.PRNGKey(0), kmeans_iters=iters)
+                jax.block_until_ready(res.kmeans.centers)
+                return res
+
+            pipeline()  # warmup: pay every jit compile before timing
+
+            gen_raw = gen_mapped = 0.0
+            if "{mode}" == "0":
+                # producer-side cost the prefetcher can hide, per pass kind
+                # (only the OFF child's numbers are reported, so the ON
+                # child skips the extra passes). The tf-idf df fold consumes
+                # the RAW counts stream (chunk gen only); every other pass
+                # consumes the MAPPED stream (gen + rescale dispatch on the
+                # caller's thread, rescale execution overlapping on the XLA
+                # pool exactly as in a pipeline pass — block only the tail).
+                t0 = time.perf_counter()
+                for ch in counts.chunks():
+                    pass
+                gen_raw = time.perf_counter() - t0
+                xs = tfidf.tfidf_stream(counts)
+                t0 = time.perf_counter()
+                last = None
+                for ch in xs.chunks():
+                    last = ch
+                jax.block_until_ready(last.x)
+                gen_mapped = time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            res = pipeline()
+            wall = time.perf_counter() - t0
+            # pass structure: 1 raw df fold + mapped reservoir sample +
+            # mapped kmeans iterations (tol=0: always exactly iters) +
+            # mapped final assignment
+            producer = gen_raw + (iters + 2) * gen_mapped
+            peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+            print(f"RESULT wall_us={{wall * 1e6:.1f}}"
+                  f" producer_us={{producer * 1e6:.1f}}"
+                  f" raw_pass_us={{gen_raw * 1e6:.1f}}"
+                  f" mapped_pass_us={{gen_mapped * 1e6:.1f}}"
+                  f" mapped_passes={{iters + 2}}"
+                  f" peak_rss_mb={{peak:.1f}}"
+                  f" rss={{float(res.kmeans.rss):.2f}}")
+        """)
+        env = dict(os.environ, JAX_PLATFORMS="cpu")
+        env.setdefault("PYTHONPATH", "src")
+        out = subprocess.run(
+            [sys.executable, "-c", child], capture_output=True, text=True,
+            timeout=7200, env=env,
+        )
+        if out.returncode != 0:
+            print(f"# stream_oocore: subprocess failed\n{out.stderr}")
+            return
+        for line in out.stdout.splitlines():
+            if line.startswith("RESULT "):
+                got[mode] = dict(kv.split("=", 1) for kv in line.split()[1:])
+    on, off = got["2"], got["0"]
+    assert on["rss"] == off["rss"], (on, off)  # prefetch must not change math
     dense_mb = n * d * 4 / 2**20
-    row(f"stream_oocore_buckshot_n{n}_d{d}_c{chunks}", float(got["wall_us"]),
-        f"peak_rss_mb={float(got['peak_rss_mb']):.0f};"
+    wall_on, wall_off = float(on["wall_us"]), float(off["wall_us"])
+    producer = float(off["producer_us"])  # 1 raw + (iters+2) mapped passes
+    # the GATED peak_rss_mb is the prefetch-OFF child's: deterministic
+    # residency (single in-flight chunk), comparable across PRs. The ON
+    # child's high-water floats with producer scheduling (2-4 chunk
+    # buffers), so it rides along informationally as peak_rss_on_mb.
+    row(f"stream_oocore_buckshot_n{n}_d{d}_c{chunks}", wall_on,
+        f"peak_rss_mb={float(off['peak_rss_mb']):.0f};"
         f"dense_mb={dense_mb:.0f};"
-        f"residency_ratio={float(got['peak_rss_mb']) / dense_mb:.2f}x;"
-        f"rss={got['rss']}")
+        f"residency_ratio={float(off['peak_rss_mb']) / dense_mb:.2f}x;"
+        f"rss={on['rss']};"
+        f"prefetch_off_us={wall_off:.1f};"
+        f"peak_rss_on_mb={float(on['peak_rss_mb']):.0f};"
+        f"producer_us_total={producer:.1f};"
+        f"raw_pass_us={float(off['raw_pass_us']):.1f};"
+        f"mapped_pass_us={float(off['mapped_pass_us']):.1f};"
+        f"mapped_passes={off['mapped_passes']};"
+        f"producer_frac_off={producer / wall_off:.2f};"
+        f"overlap_saved_pct={100.0 * (wall_off - wall_on) / wall_off:.1f}")
 
 
 TABLES = [table1, table2, table3, table4, table5, table6, table7, table8,

@@ -6,9 +6,17 @@ OUT-OF-CORE — the dense (n, d) matrix never exists.
 Generates 4000 documents from a 12-topic model as a chunked stream
 (4 chunks of 1000), weights them with streaming two-pass tf-idf, and runs
 the paper's three algorithms through their streaming entry points (K-Means
-baseline, BKC, Buckshot), printing time / RSS / purity for each. Peak
-residency is O(chunk·d), so the same script runs at n = 1M by changing two
-numbers. ~30s on CPU.
+baseline, BKC, Buckshot), printing time / RSS / purity for each. Chunks
+prefetch on a background thread while the device folds (DESIGN.md §11;
+``REPRO_STREAM_PREFETCH=0`` disables). Peak residency is O(chunk·d), so the
+same script runs at n = 1M by changing two numbers. ~30s on CPU.
+
+With more than one visible device the same stream also runs the DISTRIBUTED
+streaming Buckshot (chunks sharded on arrival, sample drawn by the sharded
+one-pass reservoir, one collective per pass):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        PYTHONPATH=src python examples/quickstart.py
 """
 
 import time
@@ -52,6 +60,24 @@ def main() -> None:
           f"RSS loss {100*(rss_bk/rss_km-1):+5.2f}%")
     print(f"Buckshot: {100*(1-t_bs/t_km):5.1f}% faster, "
           f"RSS loss {100*(rss_bs/rss_km-1):+5.2f}%")
+
+    if jax.device_count() > 1 and chunk % jax.device_count() == 0:
+        from repro.core.sampling import buckshot_sample_size
+        from repro.distrib.cluster import buckshot_distributed_stream
+        from repro.distrib.sharding import make_flat_mesh
+
+        mesh = make_flat_mesh()
+        res = buckshot_distributed_stream(
+            mesh, ("data",), xs, k, key,
+            sample_size=buckshot_sample_size(n, k), kmeans_iters=2,
+        )
+        pur = metrics.purity(jnp.asarray(res.assignment), labels, k, k)
+        print(f"\ndistributed streaming Buckshot ({jax.device_count()} "
+              f"devices): RSS={float(res.rss):8.2f}   purity={float(pur):.3f}")
+    else:
+        print("\n(more than one device — a count dividing the chunk size — "
+              "unlocks the distributed streaming Buckshot; see the module "
+              "docstring)")
 
 
 if __name__ == "__main__":

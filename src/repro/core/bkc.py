@@ -195,9 +195,10 @@ def bkc_fit_stream(
     impl: str = "xla",
 ) -> BKCResult:
     """Out-of-core BKC: passes 1 and 3 stream chunks through the fused kernel
-    with carried accumulators; the K×K group phase runs on the replicated
-    O(BigK·d) micro-cluster statistics as before. Peak residency is
-    O(chunk·d + BigK·d) for any collection size.
+    with carried accumulators (the shared executor prefetches chunk i+1 while
+    chunk i folds — text/stream.run_pass); the K×K group phase runs on the
+    replicated O(BigK·d) micro-cluster statistics as before. Peak residency
+    is O(chunk·d + BigK·d) for any collection size.
     """
     from repro.core.kmeans import _stream_pass
 

@@ -152,8 +152,11 @@ def buckshot_stream(
     running top-s reservoir over the chunk stream (exact uniform sample —
     core/sampling.reservoir_sample_stream), phase 1 runs matrix-free on the
     O(s·d) sample, and phase 2 streams the whole collection through the
-    carried-accumulator K-Means passes. Peak residency O(chunk·d + s·d + k·d)
-    — the dense (n, d) matrix never exists anywhere.
+    carried-accumulator K-Means passes. Every pass rides the shared
+    streaming executor (text/stream.run_pass), so chunk regeneration
+    overlaps the device fold. Peak residency O(chunk·d + s·d + k·d) — the
+    dense (n, d) matrix never exists anywhere. The distributed twin is
+    distrib/cluster.buckshot_distributed_stream.
     """
     from repro.core.kmeans import kmeans_fit_stream
 

@@ -157,20 +157,29 @@ def _stream_fold_chunk(carry, x, w, centers, *, impl: str = "xla"):
 
 
 def _stream_pass(stream, centers, k: int, impl: str, collect: bool = False):
-    """One full pass: carried f32 accumulators over chunks, O(chunk + k·d)
-    resident. Returns (stats carry, idx (n,) np, best_sim (n,) np, objective)
-    — idx/best_sim None unless ``collect``."""
-    carry = ops.stats_identity(k, stream.dim)
+    """One full pass driven by the shared streaming executor
+    (text/stream.run_pass): the prefetcher's background thread regenerates
+    chunk i+1 while the device folds chunk i into the carried f32
+    accumulators — O(chunk + k·d) resident. Returns (stats carry, idx (n,)
+    np, best_sim (n,) np, objective) — idx/best_sim None unless
+    ``collect``."""
+    from repro.text.stream import run_pass  # lazy: keeps layering acyclic
+
     idxs, sims = [], []
-    obj = jnp.float32(0.0)
-    for ch in stream.chunks():
+
+    def fold(state, ch, ci):
+        carry, obj = state
         carry, (idx, sim, o) = _stream_fold_chunk(
             carry, jnp.asarray(ch.x), jnp.asarray(ch.w), centers, impl=impl
         )
-        obj = obj + o
         if collect:
             idxs.append(np.asarray(idx))
             sims.append(np.asarray(sim))
+        return carry, obj + o
+
+    carry, obj = run_pass(
+        stream, fold, (ops.stats_identity(k, stream.dim), jnp.float32(0.0))
+    )
     if not collect:
         return carry, None, None, obj
     return (

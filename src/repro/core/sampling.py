@@ -87,18 +87,25 @@ def reservoir_sample_stream(
     global indices (s,) np.int32, sorted by descending score — a uniformly
     shuffled order).
     """
+    from repro.text.stream import run_pass  # lazy: keeps layering acyclic
+
     if s > stream.n:
         raise ValueError(f"sample size {s} exceeds stream rows {stream.n}")
-    carry = (
-        jnp.full((s,), -2.0, jnp.float32),  # below even the pad sentinel
-        jnp.full((s,), -1, jnp.int32),
-        jnp.zeros((s, stream.dim), jnp.float32),
-    )
-    for ci, ch in enumerate(stream.chunks()):
+
+    def fold(carry, ch, ci):
         scores, gidx = _chunk_scores(
             jax.random.fold_in(key, ci), jnp.asarray(ch.w),
             jnp.int32(ch.start), stream.chunk,
         )
-        carry = merge_top_s(carry, scores, gidx, jnp.asarray(ch.x), s)
-    _, gidx, rows = carry
+        return merge_top_s(carry, scores, gidx, jnp.asarray(ch.x), s)
+
+    _, gidx, rows = run_pass(
+        stream,
+        fold,
+        (
+            jnp.full((s,), -2.0, jnp.float32),  # below even the pad sentinel
+            jnp.full((s,), -1, jnp.int32),
+            jnp.zeros((s, stream.dim), jnp.float32),
+        ),
+    )
     return rows, np.asarray(gidx)

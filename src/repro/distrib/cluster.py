@@ -15,6 +15,13 @@ Job structure mirrors the paper exactly:
               global top-s); job 0b = sample row collection (psum of
               one-owner buffers); phase 1 HAC on replicated sample;
               phase 2 = 2-3 K-Means jobs.
+
+Every algorithm also has an out-of-core ``*_distributed_stream`` twin: the
+same jobs in the engine's fold mode, driven chunk-by-chunk by the shared
+streaming executor (text/stream.run_pass — chunks shard on arrival while the
+prefetcher regenerates the next one), with ONE collective per pass. Buckshot's
+streaming sample is the sharded running reservoir
+(``reservoir_sample_distributed_stream``, fold-mode 'topk').
 """
 
 from __future__ import annotations
@@ -154,13 +161,17 @@ def kmeans_distributed(
 
 
 def _fold_pass(job, mesh, axes, stream, centers, collect: bool):
-    """One streaming pass of the fold job: every chunk is sharded onto the
-    mesh on arrival, map+combine folds into the per-shard carry, and ONE
-    collective (finalize) closes the pass — the combiner discipline at
-    chunk-stream granularity."""
-    carry = None
+    """One streaming pass of the fold job, driven by the shared executor
+    (text/stream.run_pass): every chunk is sharded onto the mesh on arrival
+    while the prefetcher regenerates the next chunk on a background thread,
+    map+combine folds into the per-shard carry, and ONE collective
+    (finalize) closes the pass — the combiner discipline at chunk-stream
+    granularity."""
+    from repro.text.stream import run_pass  # lazy: keeps layering acyclic
+
     idxs = []
-    for ch in stream.chunks():
+
+    def fold(carry, ch, ci):
         data = {
             "x": shard_rows(mesh, axes, jnp.asarray(ch.x)),
             "w": shard_rows(mesh, axes, jnp.asarray(ch.w)),
@@ -168,7 +179,9 @@ def _fold_pass(job, mesh, axes, stream, centers, collect: bool):
         carry, shard_outs = job.step(carry, data, {"centers": centers})
         if collect:
             idxs.append(np.asarray(shard_outs["idx"]))
-    out = job.finalize(carry)
+        return carry
+
+    out = job.finalize(run_pass(stream, fold, None))
     idx = np.concatenate(idxs)[: stream.n] if collect else None
     return out, idx
 
@@ -393,6 +406,42 @@ def sample_rows_distributed(
     return out["rows"]
 
 
+def _phase1_init_centers(
+    mesh: Mesh,
+    axes: tuple[str, ...],
+    xs: jax.Array,
+    k: int,
+    *,
+    impl: str,
+    hac: str,
+) -> jax.Array:
+    """Buckshot phase 1 on the replicated (s, d) sample rows -> (k, d)
+    initial centers. Shared by the resident and streaming distributed
+    drivers; both paths are matrix-free (no (s, s) block on any device):
+
+    hac = "replicated": phase 1 runs replicated on every device — the sample
+      is s = sqrt(kn), tiny next to the collection, and replicating it avoids
+      a scatter/gather round-trip. Same Borůvka rounds as core/buckshot.py.
+    hac = "boruvka": phase 1's per-row edge search is sharded over the mesh
+      (distrib/hac_parallel.py) — the paper's PARABLE partition+align, with an
+      O(log s) round guarantee. Same labels, bit-for-bit."""
+    xs = l2_normalize(xs)
+    if hac == "boruvka":
+        from repro.distrib.hac_parallel import single_link_labels_distributed
+
+        labels = single_link_labels_distributed(mesh, axes, xs, k, impl=impl)
+        sums, counts = ops.label_stats(xs, labels, k, impl=impl)
+        return jnp.where(counts[:, None] > 0, l2_normalize(sums), 0.0)
+
+    @jax.jit
+    def phase1(xs):
+        labels = single_link_labels_boruvka(xs, k, impl=impl)
+        sums, counts = ops.label_stats(xs, labels, k, impl=impl)
+        return jnp.where(counts[:, None] > 0, l2_normalize(sums), 0.0)
+
+    return phase1(xs)
+
+
 def buckshot_distributed(
     mesh: Mesh,
     axes: tuple[str, ...],
@@ -405,36 +454,18 @@ def buckshot_distributed(
     kmeans_iters: int = 3,
     impl: str = "xla",
     hac: str = "replicated",
+    sample_rows: jax.Array | None = None,
 ) -> DistClusterResult:
     """Buckshot: distributed sample -> single-link HAC -> 2-3 distributed
-    K-Means iterations.
+    K-Means iterations (phase-1 flavors: see ``_phase1_init_centers``).
 
-    Both paths are matrix-free (no (s, s) similarity block on any device):
-
-    hac = "replicated": phase 1 runs replicated on every device — the sample
-      is s = sqrt(kn), tiny next to the collection, and replicating it avoids
-      a scatter/gather round-trip. Same Borůvka rounds as core/buckshot.py.
-    hac = "boruvka": phase 1's per-row edge search is sharded over the mesh
-      (distrib/hac_parallel.py) — the paper's PARABLE partition+align, with an
-      O(log s) round guarantee. Same labels, bit-for-bit."""
-    xs = sample_rows_distributed(mesh, axes, x, w, sample_size, key)
-    xs = l2_normalize(xs)
-
-    if hac == "boruvka":
-        from repro.distrib.hac_parallel import single_link_labels_distributed
-
-        labels = single_link_labels_distributed(mesh, axes, xs, k, impl=impl)
-        sums, counts = ops.label_stats(xs, labels, k, impl=impl)
-        init_centers = jnp.where(counts[:, None] > 0, l2_normalize(sums), 0.0)
-    else:
-
-        @jax.jit
-        def phase1(xs):
-            labels = single_link_labels_boruvka(xs, k, impl=impl)
-            sums, counts = ops.label_stats(xs, labels, k, impl=impl)
-            return jnp.where(counts[:, None] > 0, l2_normalize(sums), 0.0)
-
-        init_centers = phase1(xs)
+    ``sample_rows`` (s, d) overrides the internal sampler — parity harness
+    hook shared with ``buckshot_distributed_stream``."""
+    if sample_rows is None:
+        sample_rows = sample_rows_distributed(mesh, axes, x, w, sample_size, key)
+    init_centers = _phase1_init_centers(
+        mesh, axes, sample_rows, k, impl=impl, hac=hac
+    )
     res = kmeans_distributed(
         mesh,
         axes,
@@ -447,3 +478,128 @@ def buckshot_distributed(
         impl=impl,
     )
     return res
+
+
+# ------------------------------------------------------- streaming Buckshot
+
+
+def reservoir_sample_distributed_stream(
+    mesh: Mesh,
+    axes: tuple[str, ...],
+    stream,
+    s: int,
+    key: jax.Array,
+) -> tuple[jax.Array, np.ndarray]:
+    """Sharded ONE-pass uniform s-sample of a chunk stream, without
+    replacement — the per-shard running top-s reservoir riding the engine's
+    fold-mode 'topk' kind.
+
+    Per chunk, every shard scores its local rows with iid uniforms (keyed
+    ``fold_in(fold_in(key, chunk_index), shard)``; chunk-padding rows score
+    -1 and lose to every real uniform) and emits its local top-s (score,
+    global index, row) candidates; the fold carry keeps each shard's running
+    top-s LOCALLY (top-s is a monoid — core/sampling.merge_top_s's argument,
+    here across chunks AND shards), and the gather-finalize takes the global
+    top-s once at the end of the pass. Global top-s of iid uniforms is an
+    exact uniform s-subset; the carry holds the rows themselves, so nothing
+    revisits the stream. O(s·d) carry per shard, one O(P·s·d) collective per
+    pass.
+
+    Returns (rows (s, d) replicated, global indices (s,) np.int32), in
+    descending-score order — a uniformly shuffled order."""
+    from repro.text.stream import run_pass  # lazy: keeps layering acyclic
+
+    if s > stream.n:
+        raise ValueError(f"sample size {s} exceeds stream rows {stream.n}")
+    check_stream_shardable(stream, mesh, axes)
+    n_shards = mesh_axis_size(mesh, axes)
+    chunk_local = stream.chunk // n_shards
+
+    def sample_map(data, bcast):
+        ws = data["w"]
+        me = jax.lax.axis_index(axes)
+        u = jax.random.uniform(jax.random.fold_in(bcast["key"], me), ws.shape)
+        scores = jnp.where(ws > 0, u, -1.0)
+        gidx = (
+            bcast["start"]
+            + me.astype(jnp.int32) * chunk_local
+            + jnp.arange(chunk_local, dtype=jnp.int32)
+        )
+        rows = data["x"]
+        if chunk_local < s:
+            # pad the candidate set to s; fillers score below even the
+            # chunk-pad sentinel, so they never survive a merge
+            pad = s - chunk_local
+            scores = jnp.concatenate(
+                [scores, jnp.full((pad,), -2.0, jnp.float32)]
+            )
+            gidx = jnp.concatenate([gidx, jnp.full((pad,), -1, jnp.int32)])
+            rows = jnp.concatenate(
+                [rows, jnp.zeros((pad, rows.shape[1]), rows.dtype)]
+            )
+        top, pos = jax.lax.top_k(scores, s)
+        return {"sample": {"score": top, "gidx": gidx[pos], "rows": rows[pos]}}
+
+    job = make_fold_job(
+        mesh, axes, sample_map, {"sample": "topk"}, name="sample_reservoir"
+    )
+
+    def fold(carry, ch, ci):
+        data = {
+            "x": shard_rows(mesh, axes, jnp.asarray(ch.x)),
+            "w": shard_rows(mesh, axes, jnp.asarray(ch.w)),
+        }
+        bcast = {
+            "key": jax.random.fold_in(key, ci),
+            "start": jnp.int32(ch.start),
+        }
+        carry, _ = job.step(carry, data, bcast)
+        return carry
+
+    out = job.finalize(run_pass(stream, fold, None))["sample"]
+    return out["rows"], np.asarray(out["gidx"])
+
+
+def buckshot_distributed_stream(
+    mesh: Mesh,
+    axes: tuple[str, ...],
+    stream,
+    k: int,
+    key: jax.Array,
+    *,
+    sample_size: int,
+    kmeans_iters: int = 3,
+    impl: str = "xla",
+    hac: str = "replicated",
+    sample_rows: jax.Array | None = None,
+) -> DistClusterResult:
+    """Out-of-core distributed Buckshot — the last algorithm of the
+    out-of-core distributed matrix.
+
+    Phase 1's s = √(kn) sample comes from the sharded one-pass streaming
+    reservoir (fold-mode 'topk' — one gather for the whole sampling pass),
+    the sample HAC runs matrix-free on the replicated O(s·d) rows
+    (``_phase1_init_centers``), and phase 2 rides the streaming distributed
+    K-Means fold (chunks sharded on arrival, k·d across the wire once per
+    pass). Peak device residency O(chunk·d/P + s·d + k·d) at any n.
+
+    Handed the same ``sample_rows``, assignments are identical to resident
+    ``buckshot_distributed`` (tests/test_streaming.py)."""
+    check_stream_shardable(stream, mesh, axes)
+    if sample_rows is None:
+        sample_rows, _ = reservoir_sample_distributed_stream(
+            mesh, axes, stream, sample_size, key
+        )
+    init_centers = _phase1_init_centers(
+        mesh, axes, sample_rows, k, impl=impl, hac=hac
+    )
+    return kmeans_distributed_stream(
+        mesh,
+        axes,
+        stream,
+        init_centers,
+        k,
+        max_iters=kmeans_iters,
+        tol=0.0,
+        impl=impl,
+    )

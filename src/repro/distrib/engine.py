@@ -15,7 +15,9 @@ per-output reduction kind (the shuffle+reduce):
 
 Reduce kinds may sit at any PREFIX of the output pytree (a single kind can
 cover a whole subtree — 'component' relies on this to see its w/row/col
-triple together).
+triple together). Fold mode (FoldJob below) additionally supports the
+'topk' running-reservoir kind, which has a chunk monoid but no one-shot
+reduce; make_job rejects it.
 
 The combiner discipline is what made PKMeans efficient on Hadoop and is what
 keeps the ICI traffic at O(k*d) here: map_combine must aggregate locally before
@@ -92,6 +94,12 @@ def make_job(
       sharded on dim 0; bcast arrays are replicated.
     """
     flat_kinds, kinds_def = jax.tree_util.tree_flatten(reduce_kinds)
+    bad = sorted({k for k in flat_kinds if k != "shard" and k not in _REDUCERS})
+    if bad:
+        raise ValueError(
+            f"make_job supports {sorted(_REDUCERS)}/shard reduce kinds"
+            f" ('topk' is fold-mode only), got {bad}"
+        )
 
     def inner(data, bcast):
         out = map_combine(data, bcast)
@@ -150,6 +158,38 @@ _MONOID: dict[str, Callable[[Any, Any], Any]] = {
 }
 
 
+def _topk_merge(a: dict, b: dict) -> dict:
+    """Chunk monoid of the 'topk' fold kind: top-s (by the 'score' leaf) of
+    the union of two fixed-size candidate sets. Every other leaf in the
+    subtree is payload, carried along axis 0 — top_s(A ∪ B) =
+    top_s(top_s(A) ∪ top_s(B)), the same monoid as core/sampling.merge_top_s.
+    """
+    s = a["score"].shape[0]
+    _, pos = jax.lax.top_k(jnp.concatenate([a["score"], b["score"]]), s)
+    return jax.tree_util.tree_map(
+        lambda av, bv: jnp.concatenate([av, bv])[pos], a, b
+    )
+
+
+def _check_topk(subtree: Any) -> None:
+    if not (isinstance(subtree, dict) and "score" in subtree):
+        raise ValueError(
+            "'topk' fold kind expects a dict subtree with a 'score' leaf"
+            " (plus payload arrays aligned on axis 0), got"
+            f" {type(subtree).__name__}"
+        )
+    s = subtree["score"].shape[0]
+    for path, leaf in jax.tree_util.tree_flatten_with_path(subtree)[0]:
+        if leaf.shape[:1] != (s,):
+            # enforce here: a misaligned payload would otherwise survive the
+            # merge as clamped-gather garbage instead of an error
+            raise ValueError(
+                "'topk' payload leaves must share the score leaf's axis-0"
+                f" length {s}; leaf {jax.tree_util.keystr(path)} has shape"
+                f" {leaf.shape}"
+            )
+
+
 class FoldJob:
     """Streaming fold mode of a MapReduce job (out-of-core chunk streams).
 
@@ -169,8 +209,17 @@ class FoldJob:
     This is the paper's combiner discipline lifted across chunks: a mapper
     folds every split it is handed before anything shuffles, so the wire cost
     of an entire multi-chunk pass equals that of one resident job. Fold mode
-    supports 'sum' | 'min' | 'max' (+ 'shard' passthrough); 'gather' and
-    'component' have no chunk-monoid form.
+    supports 'sum' | 'min' | 'max' | 'topk' (+ 'shard' passthrough); 'gather'
+    and 'component' have no chunk-monoid form.
+
+    'topk' is the running-reservoir kind: the subtree must be a dict with a
+    'score' leaf of fixed size s (plus payload leaves aligned on axis 0 —
+    e.g. global row indices and the rows themselves). Each chunk the map
+    emits s candidates per shard; the carry keeps the shard's running top-s
+    LOCALLY (top-s is a monoid), and finalize all-gathers the P per-shard
+    top-s sets and takes the global top-s — ONE gather for the whole pass,
+    O(P·s) wire instead of O(n). This is how the distributed Buckshot sample
+    reservoir rides fold mode (distrib/cluster).
 
     The carry is a tuple of (P, ...) arrays sharded over ``axes`` — shard p's
     running partial lives in slice p and never moves between devices until
@@ -187,10 +236,13 @@ class FoldJob:
         name: str = "fold",
     ):
         flat_kinds, kinds_def = jax.tree_util.tree_flatten(reduce_kinds)
-        bad = sorted({k for k in flat_kinds if k not in ("shard", *_MONOID)})
+        bad = sorted(
+            {k for k in flat_kinds if k not in ("shard", "topk", *_MONOID)}
+        )
         if bad:
             raise ValueError(
-                f"fold mode supports sum/min/max/shard reduce kinds, got {bad}"
+                "fold mode supports sum/min/max/topk/shard reduce kinds,"
+                f" got {bad}"
             )
         fold_kinds = [k for k in flat_kinds if k != "shard"]
         self.name = name
@@ -210,20 +262,38 @@ class FoldJob:
 
         def inner_first(data, bcast):
             folds, shards = split(map_combine(data, bcast))
+            for f, k in zip(folds, fold_kinds):
+                if k == "topk":
+                    _check_topk(f)
             return tuple(tmap(lambda v: v[None], f) for f in folds), shards
+
+        def merge_fold(c, f, k):
+            if k == "topk":  # joint merge across the subtree, not leafwise
+                merged = _topk_merge(tmap(lambda cv: cv[0], c), f)
+                return tmap(lambda v: v[None], merged)
+            return tmap(lambda cv, fv, op=_MONOID[k]: op(cv[0], fv)[None], c, f)
 
         def inner_step(carry, data, bcast):
             folds, shards = split(map_combine(data, bcast))
             carry = tuple(
-                tmap(lambda cv, fv, op=_MONOID[k]: op(cv[0], fv)[None], c, f)
+                merge_fold(c, f, k)
                 for c, f, k in zip(carry, folds, fold_kinds)
             )
             return carry, shards
 
+        def topk_finalize(v):
+            # gather-finalize: the P per-shard top-s sets cross the wire once,
+            # then every device takes the same global top-s (replicated).
+            g = tmap(lambda x: jax.lax.all_gather(x, axes, tiled=True), v)
+            _, pos = jax.lax.top_k(g["score"], v["score"].shape[0])
+            return tmap(lambda x: x[pos], g)
+
         def inner_finalize(carry):
             # psum-family collectives accept pytrees, so a subtree reduces whole
             reduced = iter(
-                _REDUCERS[k](tmap(lambda cv: cv[0], c), axes)
+                topk_finalize(tmap(lambda cv: cv[0], c))
+                if k == "topk"
+                else _REDUCERS[k](tmap(lambda cv: cv[0], c), axes)
                 for c, k in zip(carry, fold_kinds)
             )
             return jax.tree_util.tree_unflatten(

@@ -8,17 +8,26 @@ mean every jitted per-chunk op compiles exactly once, and re-iterability means
 multi-pass algorithms (two-pass tf-idf, K-Means iterations) recompute chunks
 instead of storing them: peak residency is O(chunk·d), never O(n·d).
 
-Consumers (core/kmeans, core/bkc, core/buckshot, distrib/cluster, text/tfidf)
-duck-type on ``.chunks()`` / ``.n`` / ``.dim`` / ``.chunk`` — nothing below
-``text/`` imports this module, so the layering stays acyclic. The resident
-paths are the one-chunk specialization: ``CorpusStream.from_array(x)`` yields
-the whole array as a single chunk, and every streaming entry point run on it
-reproduces the resident oracle.
+Consumers (core/kmeans, core/bkc, core/buckshot, core/sampling,
+distrib/cluster, text/tfidf) duck-type on ``.chunks()`` / ``.n`` / ``.dim`` /
+``.chunk`` and drive every pass through ONE streaming executor —
+``run_pass`` below, a bounded double-buffered prefetcher (DESIGN.md §11): a
+background thread regenerates chunk ``i+1`` while the caller's thread folds
+chunk ``i`` on device, so host chunk generation and device compute overlap
+instead of serializing. Prefetch is ON by default;
+``REPRO_STREAM_PREFETCH=0`` (or ``prefetch=0``) turns it off for benches.
+Core/distrib import the executor lazily inside their pass drivers, so the
+layering stays acyclic. The resident paths are the one-chunk specialization:
+``CorpusStream.from_array(x)`` yields the whole array as a single chunk, and
+every streaming entry point run on it reproduces the resident oracle.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Iterable, Iterator, NamedTuple, Sequence
+import os
+import queue
+import threading
+from typing import Any, Callable, Iterable, Iterator, NamedTuple, Sequence
 
 import numpy as np
 
@@ -72,7 +81,7 @@ class CorpusStream:
 
     @property
     def n_chunks(self) -> int:
-        return max(1, -(-self.n // self.chunk))
+        return -(-self.n // self.chunk)
 
     def chunks(self) -> Iterator[StreamChunk]:
         """A fresh pass over the stream."""
@@ -166,4 +175,156 @@ class CorpusStream:
         """Concatenate the stream back into a resident (n, dim) array —
         tests/oracles only; defeats the point everywhere else."""
         parts = [np.asarray(ch.x) for ch in self.chunks()]
+        if not parts:  # an n == 0 stream yields no chunks
+            return np.zeros((0, self.dim), np.float32)
         return np.concatenate(parts, axis=0)[: self.n]
+
+
+# ------------------------------------------------------------------ executor
+#
+# THE streaming executor: every per-algorithm pass (core/kmeans._stream_pass,
+# core/sampling.reservoir_sample_stream, text/tfidf.df_stream,
+# distrib/cluster._fold_pass, ...) drives its chunks through run_pass, which
+# wraps each fresh pass in a bounded double-buffered prefetcher: a background
+# thread pulls chunk i+1 out of the source generator (host rng / hashing /
+# mapped device dispatch) while the caller's thread folds chunk i. The chunk
+# ORDER and VALUES are untouched — prefetch on/off runs the identical compute
+# graph, so results are bit-identical either way (tests/test_streaming.py).
+
+
+class _Raise:
+    """Producer-side exception, carried through the queue and re-raised on
+    the consumer thread (the from_blocks contract checks must surface)."""
+
+    __slots__ = ("exc",)
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+_END = object()  # producer-exhausted sentinel
+
+
+class _PrefetchIter:
+    """Iterator over ``source`` with up to ``depth`` items produced ahead by
+    a daemon thread. ``close()`` stops the producer early (abandoned pass)."""
+
+    def __init__(self, source: Iterator[Any], depth: int):
+        self._q: "queue.Queue[Any]" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._done = False
+        self._thread = threading.Thread(
+            target=self._produce, args=(source,), daemon=True,
+            name="corpus-stream-prefetch",
+        )
+        self._thread.start()
+
+    def _produce(self, source: Iterator[Any]) -> None:
+        try:
+            for item in source:
+                if not self._put(item):
+                    return  # consumer closed the pass
+            self._put(_END)
+        except BaseException as e:  # noqa: BLE001 — forwarded, not swallowed
+            self._put(_Raise(e))
+
+    def _put(self, item: Any) -> bool:
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def __iter__(self) -> "_PrefetchIter":
+        return self
+
+    def __next__(self) -> Any:
+        if self._done:
+            raise StopIteration
+        item = self._q.get()
+        if item is _END:
+            self._done = True
+            self._thread.join()
+            raise StopIteration
+        if isinstance(item, _Raise):
+            self._done = True
+            self._thread.join()
+            raise item.exc
+        return item
+
+    def close(self) -> None:
+        """Stop the producer without draining the pass (early exit)."""
+        if self._done:
+            return
+        self._done = True
+        self._stop.set()
+        while True:  # unblock a producer stuck in put()
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=5.0)
+
+    def __del__(self) -> None:  # pragma: no cover — GC safety net
+        try:
+            self.close()
+        except Exception:
+            pass
+
+
+def _resolve_prefetch(prefetch: Any) -> int:
+    """Prefetch depth: explicit arg wins, else ``REPRO_STREAM_PREFETCH``
+    (unset -> 2, the double buffer; 0/'off' disables — the bench switch)."""
+    if prefetch is None:
+        env = os.environ.get("REPRO_STREAM_PREFETCH", "").strip().lower()
+        if env in ("", "on", "true"):
+            return 2
+        if env in ("off", "false"):
+            return 0
+        try:
+            return max(0, int(env))
+        except ValueError:
+            raise ValueError(
+                f"REPRO_STREAM_PREFETCH={env!r}: expected an integer depth"
+                " (0 disables) or on/true/off/false"
+            ) from None
+    if prefetch is True:
+        return 2
+    if prefetch is False:
+        return 0
+    return max(0, int(prefetch))
+
+
+def iter_chunks(stream, *, prefetch: Any = None) -> Iterator[StreamChunk]:
+    """A fresh prefetched pass over any ``.chunks()`` duck-typed stream.
+
+    Re-iteration semantics are the stream's own: each call opens a NEW pass
+    (fresh generator, fresh prefetch thread), so multi-pass algorithms see
+    fresh chunks and never an exhausted iterator."""
+    it = stream.chunks()
+    depth = _resolve_prefetch(prefetch)
+    if depth <= 0:
+        return it
+    return _PrefetchIter(it, depth)
+
+
+def run_pass(stream, fold: Callable, carry: Any, *, prefetch: Any = None):
+    """One full pass over ``stream``: ``fold(carry, chunk, index) -> carry``.
+
+    ``fold`` runs on the caller's thread (device dispatch + any host-side
+    collection) while the prefetcher's background thread regenerates the
+    next chunk — the host chunk-generation and device fold of consecutive
+    chunks overlap. Returns the final carry (the initial ``carry`` for an
+    n == 0 stream). The pass is closed on any exit, so a fold that raises
+    does not leave a producer thread spinning."""
+    it = iter_chunks(stream, prefetch=prefetch)
+    try:
+        for ci, ch in enumerate(it):
+            carry = fold(carry, ch, ci)
+    finally:
+        close = getattr(it, "close", None)
+        if close is not None:
+            close()
+    return carry

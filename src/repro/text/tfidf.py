@@ -83,17 +83,21 @@ def tfidf_distributed(
 
 def df_stream(stream) -> tuple[jax.Array, jax.Array]:
     """Pass 1 over a count-chunk stream: fold (df (d,), n) — exact, since
-    both are integer-valued however the chunks split the rows."""
-    df = n = None
-    for ch in stream.chunks():
+    both are integer-valued however the chunks split the rows. Driven by the
+    shared streaming executor, so chunk generation overlaps the fold."""
+    from repro.text.stream import run_pass
+
+    def fold(carry, ch, ci):
         part = _df_map({"counts": jnp.asarray(ch.x), "w": jnp.asarray(ch.w)}, ())
-        if df is None:
-            df, n = part["df"], part["n"]
-        else:
-            df, n = df + part["df"], n + part["n"]
-    if df is None:
+        if carry is None:
+            return part["df"], part["n"]
+        df, n = carry
+        return df + part["df"], n + part["n"]
+
+    out = run_pass(stream, fold, None)
+    if out is None:
         raise ValueError("df_stream: empty stream")
-    return df, n
+    return out
 
 
 def tfidf_stream(stream):
@@ -110,19 +114,22 @@ def df_fold_distributed(mesh, axes, stream) -> dict:
     """Distributed pass 1: the engine fold job — every chunk is mapped and
     combined per shard, ONE psum closes the pass (not one per chunk)."""
     from repro.distrib.sharding import check_stream_shardable, shard_rows
+    from repro.text.stream import run_pass
 
     check_stream_shardable(stream, mesh, axes)
     job = make_fold_job(
         mesh, axes, _df_map, {"df": "sum", "n": "sum"}, name="tfidf_df_fold"
     )
-    carry = None
-    for ch in stream.chunks():
+
+    def fold(carry, ch, ci):
         data = {
             "counts": shard_rows(mesh, axes, jnp.asarray(ch.x)),
             "w": shard_rows(mesh, axes, jnp.asarray(ch.w)),
         }
         carry, _ = job.step(carry, data, {})
-    return job.finalize(carry)
+        return carry
+
+    return job.finalize(run_pass(stream, fold, None))
 
 
 def tfidf_distributed_stream(mesh, axes, stream):

@@ -130,6 +130,33 @@ def test_distributed_boruvka_non_divisible_sample():
     """)
 
 
+def test_distributed_boruvka_prewarm_parity():
+    """The async round-shape pre-warm (AOT executables + device_put placement)
+    must be a pure scheduling change: edges bit-identical to the synchronous
+    compile path, including a padded (non-divisible) sample, and the
+    cancelled-pending teardown must not wedge or abort the process."""
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.common import l2_normalize
+    from repro.distrib.hac_parallel import boruvka_mst_distributed
+    from repro.distrib.sharding import make_flat_mesh
+
+    rng = np.random.default_rng(7)
+    mesh = make_flat_mesh(8)
+    for s in (256, 321):
+        xs = l2_normalize(jnp.asarray(
+            rng.normal(size=(s, 16)).astype(np.float32)))
+        warm = boruvka_mst_distributed(mesh, ("data",), xs, prewarm=True)
+        sync = boruvka_mst_distributed(mesh, ("data",), xs, prewarm=False)
+        for a, b in zip(warm, sync):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # second warmed call hits the executable cache
+        again = boruvka_mst_distributed(mesh, ("data",), xs, prewarm=True)
+        np.testing.assert_array_equal(np.asarray(again.u), np.asarray(warm.u))
+    print("PREWARM PARITY OK")
+    """)
+
+
 def test_distributed_boruvka_pre_reduce_4dev_matches_oracles():
     """Shuffle-light path: per-shard per-component pre-reduce + the engine's
     'component' fold must match BOTH the single-device Borůvka and the Prim

@@ -136,6 +136,124 @@ def test_stream_reiterable(corpus):
     np.testing.assert_array_equal(a, b)
 
 
+# ----------------------------------------------------------------- executor
+
+
+def _collect_pass(stream, **kw):
+    from repro.text.stream import run_pass
+
+    return run_pass(
+        stream, lambda acc, ch, ci: acc + [(ci, np.asarray(ch.x).copy())], [],
+        **kw,
+    )
+
+
+def test_executor_contract_violations_surface_through_prefetch():
+    """from_blocks contract checks raise on the CONSUMER thread even though
+    the prefetcher produces chunks on a background thread."""
+    z = lambda r: np.zeros((r, 4), np.float32)
+
+    short_mid = CorpusStream.from_blocks(
+        lambda: iter([z(3), z(8)]), n=11, dim=4, chunk=8
+    )
+    with pytest.raises(ValueError, match="short block"):
+        _collect_pass(short_mid, prefetch=2)
+
+    mismatch = CorpusStream.from_blocks(
+        lambda: iter([z(8), z(3)]), n=20, dim=4, chunk=8
+    )
+    with pytest.raises(ValueError, match="declared n"):
+        _collect_pass(mismatch, prefetch=2)
+
+
+def test_executor_empty_stream():
+    """An n = 0 stream yields no chunks: run_pass returns the initial carry,
+    materialize is (0, dim), and df_stream refuses it."""
+    st = CorpusStream.from_blocks(lambda: iter([]), n=0, dim=4, chunk=8)
+    assert st.n_chunks == 0
+    assert _collect_pass(st, prefetch=2) == []
+    assert st.materialize().shape == (0, 4)
+    with pytest.raises(ValueError, match="empty stream"):
+        tfidf.df_stream(st)
+
+
+def test_executor_map_reiteration_fresh_passes():
+    """A mapped stream re-iterates under the prefetcher: every pass is a
+    fresh generator (no iterator exhaustion), chunks bit-identical."""
+    st, _ = synth.stream_corpus(500, vocab=64, n_topics=4, seed=1, chunk=96)
+    mapped = st.map(lambda x, w: jnp.asarray(x) * 2.0)
+    a = _collect_pass(mapped, prefetch=2)
+    b = _collect_pass(mapped, prefetch=2)
+    assert len(a) == len(b) == mapped.n_chunks
+    for (ci_a, x_a), (ci_b, x_b) in zip(a, b):
+        assert ci_a == ci_b
+        np.testing.assert_array_equal(x_a, x_b)
+    np.testing.assert_array_equal(
+        np.concatenate([x for _, x in a])[:500], mapped.materialize()
+    )
+
+
+def test_executor_prefetch_on_off_chunks_identical():
+    """Prefetch changes WHO computes a chunk, never the chunk: same order,
+    same values, with a depth larger than the chunk count too."""
+    st, _ = synth.stream_corpus(500, vocab=64, n_topics=4, seed=1, chunk=96)
+    off = _collect_pass(st, prefetch=0)
+    for depth in (1, 2, 16):
+        on = _collect_pass(st, prefetch=depth)
+        assert [ci for ci, _ in on] == [ci for ci, _ in off]
+        for (_, x_on), (_, x_off) in zip(on, off):
+            np.testing.assert_array_equal(x_on, x_off)
+
+
+def test_executor_close_stops_abandoned_producer():
+    """A fold that raises mid-pass must not leave the producer thread
+    spinning (run_pass closes the prefetcher on any exit)."""
+    import threading
+
+    from repro.text.stream import run_pass
+
+    st, _ = synth.stream_corpus(500, vocab=64, n_topics=4, seed=1, chunk=96)
+
+    def boom(acc, ch, ci):
+        raise RuntimeError("abandon pass")
+
+    before = threading.active_count()
+    with pytest.raises(RuntimeError, match="abandon pass"):
+        run_pass(st, boom, None, prefetch=2)
+    # run_pass's finally-close joins the producer thread before re-raising
+    assert threading.active_count() <= before
+
+
+def test_prefetch_parity_env_switch(corpus, monkeypatch):
+    """Streaming K-Means/BKC/Buckshot are bit-identical with prefetch on vs
+    off (REPRO_STREAM_PREFETCH env switch), single device, non-chunk-multiple
+    n (800 % 96 != 0)."""
+    results = {}
+    for mode in ("0", "2"):
+        monkeypatch.setenv("REPRO_STREAM_PREFETCH", mode)
+        xs = _x_stream(chunk=96)
+        init = init_random_centers(jax.random.PRNGKey(0), xs.materialize(), 8)
+        km = kmeans_fit_stream(xs, init, 8, max_iters=4)
+        bk = bkc_fit_stream(xs, l2_normalize(xs.materialize()[:32]), 32, 8)
+        bs = buckshot_stream(xs, 8, jax.random.PRNGKey(0), kmeans_iters=2)
+        results[mode] = (km, bk, bs)
+    km0, bk0, bs0 = results["0"]
+    km1, bk1, bs1 = results["2"]
+    np.testing.assert_array_equal(km0.assignment, km1.assignment)
+    np.testing.assert_array_equal(np.asarray(km0.centers), np.asarray(km1.centers))
+    np.testing.assert_array_equal(bk0.assignment, bk1.assignment)
+    np.testing.assert_array_equal(
+        np.asarray(bk0.group_of_mc), np.asarray(bk1.group_of_mc)
+    )
+    np.testing.assert_array_equal(bs0.kmeans.assignment, bs1.kmeans.assignment)
+    np.testing.assert_array_equal(
+        np.asarray(bs0.sample_idx), np.asarray(bs1.sample_idx)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(bs0.init_centers), np.asarray(bs1.init_centers)
+    )
+
+
 # ------------------------------------------------------------------ tf-idf
 
 
@@ -411,6 +529,173 @@ def test_distributed_streaming_bkc_matches_resident_4dev():
         rtol=1e-5, atol=1e-7)
     np.testing.assert_allclose(float(res.rss), float(sres.rss), rtol=1e-5)
     print("BKC STREAM OK")
+    """)
+
+
+def test_fold_job_topk_kind_4dev():
+    """Engine fold-mode 'topk': per-shard running top-s + gather-finalize ==
+    direct global top-s of every candidate ever emitted."""
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.distrib.engine import make_fold_job
+    from repro.distrib.sharding import make_flat_mesh, shard_rows
+
+    mesh = make_flat_mesh(4)
+    s = 6
+    rng = np.random.default_rng(0)
+    scores = rng.permutation(160).astype(np.float32)  # distinct -> unique top
+    payload = np.arange(160, dtype=np.int32) * 10
+
+    def mc(data, bcast):
+        top, pos = jax.lax.top_k(data["score"], s)
+        return {"best": {"score": top, "tag": data["tag"][pos]}}
+
+    fold = make_fold_job(mesh, ("data",), mc, {"best": "topk"})
+    carry = None
+    for start in range(0, 160, 40):
+        data = {
+            "score": shard_rows(mesh, ("data",), jnp.asarray(scores[start:start + 40])),
+            "tag": shard_rows(mesh, ("data",), jnp.asarray(payload[start:start + 40])),
+        }
+        carry, _ = fold.step(carry, data, {})
+    out = fold.finalize(carry)["best"]
+    want = np.argsort(-scores)[:s]
+    np.testing.assert_array_equal(np.asarray(out["score"]), scores[want])
+    np.testing.assert_array_equal(np.asarray(out["tag"]), payload[want])
+    print("TOPK FOLD OK")
+    """)
+
+
+def test_fold_job_topk_requires_score_leaf():
+    from repro.distrib.engine import _check_topk
+
+    with pytest.raises(ValueError, match="score"):
+        _check_topk({"gidx": None})
+    with pytest.raises(ValueError, match="score"):
+        _check_topk(np.zeros((3,)))
+
+
+def test_distributed_streaming_reservoir_matches_oracle_4dev():
+    """Sharded streaming reservoir == host-replayed global top-s of the same
+    per-(chunk, shard) uniforms, rows == the corpus rows at those indices
+    (non-shard-multiple n: the padded tail never samples)."""
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.distrib.cluster import reservoir_sample_distributed_stream
+    from repro.distrib.sharding import make_flat_mesh
+    from repro.text import synth, tfidf
+
+    mesh = make_flat_mesh(4)
+    n, chunk, s = 403, 80, 48
+    key = jax.random.PRNGKey(3)
+    c = synth.make_corpus(n, vocab=128, n_topics=6, seed=4)
+    x = np.asarray(tfidf.tfidf(jnp.asarray(c.counts)))
+
+    st, _ = synth.stream_corpus(n, vocab=128, n_topics=6, seed=4, chunk=chunk)
+    xs = tfidf.tfidf_stream(st)
+    rows, gidx = reservoir_sample_distributed_stream(mesh, ("data",), xs, s, key)
+
+    # oracle: replay every shard's per-chunk uniforms on the host
+    chunk_local = chunk // 4
+    n_chunks = -(-n // chunk)
+    full = np.full(n_chunks * chunk, -1.0, np.float32)
+    for ci in range(n_chunks):
+        ck = jax.random.fold_in(key, ci)
+        for p in range(4):
+            u = np.asarray(jax.random.uniform(
+                jax.random.fold_in(ck, p), (chunk_local,)))
+            lo = ci * chunk + p * chunk_local
+            full[lo:lo + chunk_local] = u
+    full[n:] = -1.0  # chunk-padding rows carry w == 0
+    want = np.argsort(-full)[:s]
+    np.testing.assert_array_equal(np.asarray(gidx), want)
+    np.testing.assert_allclose(np.asarray(rows), x[gidx], rtol=1e-6, atol=1e-7)
+    print("DIST RESERVOIR OK")
+    """)
+
+
+def test_buckshot_distributed_stream_matches_resident_4dev():
+    """End-to-end distributed streaming Buckshot == resident
+    buckshot_distributed handed the SAME sample rows, on a non-shard-multiple
+    n: assignments identical, centers/RSS at f32-ulp."""
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.distrib.cluster import (
+        buckshot_distributed, buckshot_distributed_stream,
+        reservoir_sample_distributed_stream)
+    from repro.distrib.sharding import (
+        make_flat_mesh, pad_rows_to_multiple, shard_rows)
+    from repro.text import synth, tfidf
+
+    mesh = make_flat_mesh(4)
+    n, chunk, k, s = 403, 80, 6, 48
+    key = jax.random.PRNGKey(3)
+    c = synth.make_corpus(n, vocab=128, n_topics=6, seed=4)
+    x = tfidf.tfidf(jnp.asarray(c.counts))
+
+    st, _ = synth.stream_corpus(n, vocab=128, n_topics=6, seed=4, chunk=chunk)
+    xs = tfidf.tfidf_stream(st)
+    sres = buckshot_distributed_stream(
+        mesh, ("data",), xs, k, key, sample_size=s, kmeans_iters=3)
+
+    # the internal sampler is deterministic in (key, chunk): re-drawing it
+    # yields the sample the streaming driver used
+    rows, gidx = reservoir_sample_distributed_stream(mesh, ("data",), xs, s, key)
+    xp, w = pad_rows_to_multiple(x, 4)
+    res = buckshot_distributed(
+        mesh, ("data",), shard_rows(mesh, ("data",), xp),
+        shard_rows(mesh, ("data",), w), k, key,
+        sample_size=s, sample_rows=rows, kmeans_iters=3)
+
+    np.testing.assert_array_equal(np.asarray(res.assignment)[:n], sres.assignment)
+    np.testing.assert_allclose(
+        np.asarray(res.centers), np.asarray(sres.centers), rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(float(res.rss), float(sres.rss), rtol=1e-5)
+    print("BUCKSHOT DIST STREAM OK")
+    """)
+
+
+def test_distributed_prefetch_parity_4dev():
+    """Streaming distributed K-Means and Buckshot: prefetch on vs off is
+    bit-identical on the mesh (the executor only moves chunk generation to a
+    background thread)."""
+    _run("""
+    import os
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core.kmeans import init_random_centers
+    from repro.distrib.cluster import (
+        buckshot_distributed_stream, kmeans_distributed_stream)
+    from repro.distrib.sharding import make_flat_mesh
+    from repro.text import synth, tfidf
+
+    mesh = make_flat_mesh(4)
+    n, chunk, k = 403, 80, 6
+    key = jax.random.PRNGKey(1)
+
+    def build():
+        st, _ = synth.stream_corpus(
+            n, vocab=128, n_topics=6, seed=4, chunk=chunk)
+        return tfidf.tfidf_stream(st)
+
+    init = init_random_centers(
+        key, jnp.asarray(build().materialize()), k)
+    got = {}
+    for mode in ("0", "2"):
+        os.environ["REPRO_STREAM_PREFETCH"] = mode
+        km = kmeans_distributed_stream(
+            mesh, ("data",), build(), init, k, max_iters=4)
+        bs = buckshot_distributed_stream(
+            mesh, ("data",), build(), k, key, sample_size=48, kmeans_iters=2)
+        got[mode] = (km, bs)
+    km0, bs0 = got["0"]; km1, bs1 = got["2"]
+    np.testing.assert_array_equal(km0.assignment, km1.assignment)
+    np.testing.assert_array_equal(
+        np.asarray(km0.centers), np.asarray(km1.centers))
+    assert km0.iterations == km1.iterations
+    np.testing.assert_array_equal(bs0.assignment, bs1.assignment)
+    np.testing.assert_array_equal(
+        np.asarray(bs0.centers), np.asarray(bs1.centers))
+    print("DIST PREFETCH PARITY OK")
     """)
 
 
