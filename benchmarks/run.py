@@ -470,7 +470,12 @@ def stream_oocore():
     producer-side cost (chunk regeneration + per-chunk rescale dispatch)
     that the prefetcher moves off the critical path; with it the overlap
     win is attributable. Non-SMALL reproduces the ISSUE shape: n = 1M,
-    d = 2048 in 64 chunks (8 GiB dense f32, streamed at 128 MiB/chunk)."""
+    d = 2048 in 64 chunks (8 GiB dense f32, streamed at 128 MiB/chunk).
+
+    A third child repeats the prefetch-ON run with the resilience layer on
+    (DiskCheckpointer snapshots every 8 chunks + guard='finite' on every
+    pass): ``guard_overhead_pct`` is the end-to-end cost of running
+    checkpointed+guarded, the number DESIGN.md §12 bounds at < 5%."""
     import subprocess
     import sys
     import textwrap
@@ -480,17 +485,19 @@ def stream_oocore():
     )
     chunk = n // chunks
     got = {}
-    for mode in ("0", "2"):
+    for mode in ("0", "2", "guard"):
+        prefetch = "2" if mode == "guard" else mode
         child = textwrap.dedent(f"""
-            import os, resource, time
+            import os, resource, tempfile, time
             os.environ.setdefault("JAX_PLATFORMS", "cpu")
-            os.environ["REPRO_STREAM_PREFETCH"] = "{mode}"
+            os.environ["REPRO_STREAM_PREFETCH"] = "{prefetch}"
             import jax, numpy as np
             from repro.core.buckshot import buckshot_stream
             from repro.text.stream import CorpusStream
             from repro.text import tfidf
 
             n, d, chunk, k, iters = {n}, {d}, {chunk}, {k}, 2
+            guarded = "{mode}" == "guard"
 
             def blocks():
                 # deterministic per-chunk synthetic counts, vectorized: every
@@ -505,9 +512,15 @@ def stream_oocore():
             counts = CorpusStream.from_blocks(blocks, n=n, dim=d, chunk=chunk)
 
             def pipeline():
-                xs = tfidf.tfidf_stream(counts)  # pass 1 fold + lazy pass 2
+                ck = guard = None
+                if guarded:
+                    from repro.resilience import DiskCheckpointer
+                    ck = DiskCheckpointer(tempfile.mkdtemp(), every=8)
+                    guard = "finite"
+                xs = tfidf.tfidf_stream(counts, checkpoint=ck, guard=guard)
                 res = buckshot_stream(
-                    xs, k, jax.random.PRNGKey(0), kmeans_iters=iters)
+                    xs, k, jax.random.PRNGKey(0), kmeans_iters=iters,
+                    checkpoint=ck, guard=guard)
                 jax.block_until_ready(res.kmeans.centers)
                 return res
 
@@ -562,10 +575,12 @@ def stream_oocore():
         for line in out.stdout.splitlines():
             if line.startswith("RESULT "):
                 got[mode] = dict(kv.split("=", 1) for kv in line.split()[1:])
-    on, off = got["2"], got["0"]
+    on, off, grd = got["2"], got["0"], got["guard"]
     assert on["rss"] == off["rss"], (on, off)  # prefetch must not change math
+    assert grd["rss"] == on["rss"], (grd, on)  # guards must not change math
     dense_mb = n * d * 4 / 2**20
     wall_on, wall_off = float(on["wall_us"]), float(off["wall_us"])
+    wall_grd = float(grd["wall_us"])
     producer = float(off["producer_us"])  # 1 raw + (iters+2) mapped passes
     # the GATED peak_rss_mb is the prefetch-OFF child's: deterministic
     # residency (single in-flight chunk), comparable across PRs. The ON
@@ -583,7 +598,9 @@ def stream_oocore():
         f"mapped_pass_us={float(off['mapped_pass_us']):.1f};"
         f"mapped_passes={off['mapped_passes']};"
         f"producer_frac_off={producer / wall_off:.2f};"
-        f"overlap_saved_pct={100.0 * (wall_off - wall_on) / wall_off:.1f}")
+        f"overlap_saved_pct={100.0 * (wall_off - wall_on) / wall_off:.1f};"
+        f"guarded_us={wall_grd:.1f};"
+        f"guard_overhead_pct={100.0 * (wall_grd - wall_on) / wall_on:.1f}")
 
 
 TABLES = [table1, table2, table3, table4, table5, table6, table7, table8,

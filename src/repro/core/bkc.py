@@ -193,20 +193,40 @@ def bkc_fit_stream(
     k: int,
     *,
     impl: str = "xla",
+    checkpoint=None,
+    guard=None,
 ) -> BKCResult:
     """Out-of-core BKC: passes 1 and 3 stream chunks through the fused kernel
     with carried accumulators (the shared executor prefetches chunk i+1 while
     chunk i folds — text/stream.run_pass); the K×K group phase runs on the
     replicated O(BigK·d) micro-cluster statistics as before. Peak residency
     is O(chunk·d + BigK·d) for any collection size.
+
+    ``checkpoint``/``guard`` thread down to both data passes (pass ids
+    ``bkc/mc`` and ``bkc/final``); pass-1's micro-cluster stats are stored as
+    a pass result so a restart killed in pass 3 skips pass 1 entirely.
     """
     from repro.core.kmeans import _stream_pass
 
     # pass 1: micro-cluster statistics folded over the stream (CF additivity
     # is the chunk monoid — the same merge_stats the distributed combiner uses)
-    (sums, counts, min_sim, sumsq), _, _, _ = _stream_pass(
-        stream, init_centers, big_k, impl
-    )
+    mc_stats = None
+    if checkpoint is not None:
+        from repro.resilience import array_token
+
+        mc_meta = {"centers": array_token(init_centers)}
+        mc_stats = checkpoint.load_result("bkc/mc", meta=mc_meta)
+    if mc_stats is not None:
+        sums, counts, min_sim, sumsq = mc_stats
+    else:
+        (sums, counts, min_sim, sumsq), _, _, _ = _stream_pass(
+            stream, init_centers, big_k, impl,
+            pass_id="bkc/mc", checkpoint=checkpoint, guard=guard,
+        )
+        if checkpoint is not None:
+            checkpoint.save_result(
+                "bkc/mc", (sums, counts, min_sim, sumsq), meta=mc_meta
+            )
     valid = counts > 0
     mc = MicroClusters(
         n=counts,
@@ -220,8 +240,11 @@ def bkc_fit_stream(
 
     # pass 3: final assignment — same streaming pass against the k centers
     (sums, counts, _, sumsq), idx, best_sim, obj = _stream_pass(
-        stream, centers, k, impl, collect=True
+        stream, centers, k, impl, collect=True,
+        pass_id="bkc/final", checkpoint=checkpoint, guard=guard,
     )
+    if checkpoint is not None:
+        checkpoint.delete_result("bkc/mc")  # the run is over
     rss = metrics.rss_from_assignment_stats(sums, counts, jnp.sum(sumsq), k)
     return BKCResult(
         centers=centers,
@@ -241,10 +264,20 @@ def bkc_stream(
     key: jax.Array,
     *,
     impl: str = "xla",
+    checkpoint=None,
+    guard=None,
 ) -> BKCResult:
     """Streaming convenience entry: the BigK random center documents come
     from the one-pass reservoir (exact uniform sample), then the fit."""
     from repro.core.sampling import reservoir_sample_stream
 
-    rows, _ = reservoir_sample_stream(stream, big_k, key)
-    return bkc_fit_stream(stream, l2_normalize(rows), big_k, k, impl=impl)
+    rows, _ = reservoir_sample_stream(
+        stream, big_k, key, checkpoint=checkpoint, guard=guard
+    )
+    result = bkc_fit_stream(
+        stream, l2_normalize(rows), big_k, k, impl=impl,
+        checkpoint=checkpoint, guard=guard,
+    )
+    if checkpoint is not None:
+        checkpoint.delete_result("reservoir")  # the run is over
+    return result

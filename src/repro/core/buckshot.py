@@ -147,6 +147,8 @@ def buckshot_stream(
     tol: float = 0.0,
     impl: str = "xla",
     hac: str = "boruvka",
+    checkpoint=None,
+    guard=None,
 ) -> BuckshotResult:
     """Out-of-core Buckshot: the s = √(kn) sample comes from a one-pass
     running top-s reservoir over the chunk stream (exact uniform sample —
@@ -157,15 +159,25 @@ def buckshot_stream(
     overlaps the device fold. Peak residency O(chunk·d + s·d + k·d) — the
     dense (n, d) matrix never exists anywhere. The distributed twin is
     distrib/cluster.buckshot_distributed_stream.
+
+    ``checkpoint`` covers every data pass: the reservoir pass stores its
+    sample as a result (a job killed in phase 2 skips the sample pass), and
+    the phase-2 K-Means passes checkpoint under the ``buckshot/`` namespace.
     """
     from repro.core.kmeans import kmeans_fit_stream
 
     s = sample_size or sampling.buckshot_sample_size(stream.n, k)
-    rows, sample_idx = sampling.reservoir_sample_stream(stream, s, key)
+    rows, sample_idx = sampling.reservoir_sample_stream(
+        stream, s, key, checkpoint=checkpoint, guard=guard
+    )
     labels, init_centers = phase1_from_sample(rows, k, impl=impl, hac=hac)
     km = kmeans_fit_stream(
-        stream, init_centers, k, max_iters=kmeans_iters, tol=tol, impl=impl
+        stream, init_centers, k, max_iters=kmeans_iters, tol=tol, impl=impl,
+        checkpoint=checkpoint.scoped("buckshot") if checkpoint is not None else None,
+        guard=guard,
     )
+    if checkpoint is not None:
+        checkpoint.delete_result("reservoir")  # the run is over
     return BuckshotResult(
         kmeans=km,
         sample_idx=jnp.asarray(sample_idx),

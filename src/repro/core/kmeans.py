@@ -43,7 +43,33 @@ def init_random_centers(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
     return l2_normalize(x[idx])
 
 
-@functools.partial(jax.jit, static_argnames=("k", "impl", "fused"))
+@jax.jit
+def _split_empty_centers(
+    centers: jax.Array,
+    sums: jax.Array,
+    counts: jax.Array,
+    sumsq: jax.Array,
+) -> jax.Array:
+    """Reseed empty clusters by splitting the highest-RSS cluster.
+
+    Without this, ``counts == 0`` keeps the stale center forever (the
+    ``jnp.where`` in the update): the cluster can only recover if a document
+    happens to drift back. The reseed policy points every empty center at the
+    worst-fit region instead: the donor is the non-empty cluster with the
+    largest RSS contribution (sumsq_c - |sums_c|^2 / n_c, from the stats the
+    fused kernel already carries), and empty center j becomes the donor's
+    center nudged along basis vector j mod d — deterministic, and distinct
+    per empty slot so the split centers immediately partition the donor's
+    members. No-op when no cluster is empty."""
+    k, d = centers.shape
+    rss_c = sumsq - jnp.sum(sums * sums, axis=1) / jnp.maximum(counts, 1.0)
+    donor = jnp.argmax(jnp.where(counts > 0, rss_c, -jnp.inf))
+    nudge = 1e-3 * jax.nn.one_hot(jnp.arange(k) % d, d, dtype=centers.dtype)
+    split = l2_normalize(centers[donor][None, :] + nudge)
+    return jnp.where((counts <= 0)[:, None], split, centers)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "impl", "fused", "reseed"))
 def kmeans_step(
     x: jax.Array,
     centers: jax.Array,
@@ -51,14 +77,24 @@ def kmeans_step(
     *,
     impl: str = "xla",
     fused: bool = True,
+    reseed: str | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """One full map/combine/reduce iteration on one device.
 
     fused=True issues exactly ONE assign+stats kernel call (one HBM read of
     x); fused=False is the legacy two-pass path, kept for benchmarks.
 
+    reseed="split" recovers empty clusters by splitting the highest-RSS
+    cluster (``_split_empty_centers``); the default (None) keeps the stale
+    center — the seed behavior, preserved for parity with the paper runs.
+    Requires the fused path (the donor choice needs the carried sumsq).
+
     Returns (new_centers, idx, best_sim, sums, counts).
     """
+    if reseed not in (None, "split"):
+        raise ValueError(f"unknown reseed policy {reseed!r}: expected 'split'")
+    if reseed and not fused:
+        raise ValueError("reseed='split' needs fused=True (donor uses sumsq)")
     if fused:
         st = ops.assign_stats(x, centers, impl=impl)
         idx, best_sim, sums, counts = st.idx, st.best_sim, st.sums, st.counts
@@ -67,6 +103,8 @@ def kmeans_step(
         sums, counts = ops.label_stats(x, idx, k, impl=impl)
     means = sums / jnp.maximum(counts, 1.0)[:, None]
     new_centers = jnp.where(counts[:, None] > 0, l2_normalize(means), centers)
+    if reseed == "split":
+        new_centers = _split_empty_centers(new_centers, sums, counts, st.sumsq)
     return new_centers, idx, best_sim, sums, counts
 
 
@@ -156,29 +194,49 @@ def _stream_fold_chunk(carry, x, w, centers, *, impl: str = "xla"):
     return ops.merge_stats(carry, st), (st.idx, st.best_sim, obj)
 
 
-def _stream_pass(stream, centers, k: int, impl: str, collect: bool = False):
+def _stream_pass(
+    stream,
+    centers,
+    k: int,
+    impl: str,
+    collect: bool = False,
+    *,
+    pass_id: str = "kmeans/pass",
+    checkpoint=None,
+    guard=None,
+):
     """One full pass driven by the shared streaming executor
     (text/stream.run_pass): the prefetcher's background thread regenerates
     chunk i+1 while the device folds chunk i into the carried f32
     accumulators — O(chunk + k·d) resident. Returns (stats carry, idx (n,)
     np, best_sim (n,) np, objective) — idx/best_sim None unless
-    ``collect``."""
+    ``collect``.
+
+    The collected idx/sim blocks live INSIDE the run_pass carry (not a
+    closure): a checkpointed snapshot then captures them with the stats, so
+    a pass killed mid-collection resumes with the already-collected prefix
+    intact — bit-identical to the uninterrupted run."""
+    from repro.resilience import array_token
     from repro.text.stream import run_pass  # lazy: keeps layering acyclic
 
-    idxs, sims = [], []
-
     def fold(state, ch, ci):
-        carry, obj = state
+        carry, obj, idxs, sims = state
         carry, (idx, sim, o) = _stream_fold_chunk(
             carry, jnp.asarray(ch.x), jnp.asarray(ch.w), centers, impl=impl
         )
         if collect:
-            idxs.append(np.asarray(idx))
-            sims.append(np.asarray(sim))
-        return carry, obj + o
+            idxs = idxs + [np.asarray(idx)]
+            sims = sims + [np.asarray(sim)]
+        return carry, obj + o, idxs, sims
 
-    carry, obj = run_pass(
-        stream, fold, (ops.stats_identity(k, stream.dim), jnp.float32(0.0))
+    carry, obj, idxs, sims = run_pass(
+        stream,
+        fold,
+        (ops.stats_identity(k, stream.dim), jnp.float32(0.0), [], []),
+        pass_id=pass_id,
+        checkpoint=checkpoint,
+        guard=guard,
+        meta={"centers": array_token(centers)} if checkpoint is not None else None,
     )
     if not collect:
         return carry, None, None, obj
@@ -198,6 +256,8 @@ def kmeans_fit_stream(
     max_iters: int = 8,
     tol: float = 1e-4,
     impl: str = "xla",
+    checkpoint=None,
+    guard=None,
 ) -> KMeansResult:
     """Out-of-core ``kmeans_fit``: the host drives iterations, each iteration
     is one streaming pass through the fused assign+stats kernel with carried
@@ -205,22 +265,56 @@ def kmeans_fit_stream(
 
     Same convergence rule as the resident path (stop when max center movement
     ≤ tol); assignment/best_sim come back as host arrays trimmed to real rows.
+
+    With a ``checkpoint`` (resilience.Checkpointer), each iteration's outcome
+    is persisted as a pass RESULT and each in-flight pass snapshots its carry:
+    a killed job restarted with the same stream/init replays completed
+    iterations from stored results (no data pass) and resumes the killed pass
+    mid-stream — the final model is bit-identical to an uninterrupted run.
+    ``guard='finite'`` raises GuardError naming the pass/chunk that first
+    produced a non-finite accumulator.
     """
+    from repro.resilience import array_token
+
     centers = init_centers
     iters = 0
-    for _ in range(max_iters):
-        (sums, counts, _, _), _, _, _ = _stream_pass(stream, centers, k, impl)
+    for i in range(max_iters):
+        pid = f"kmeans/iter{i}"
+        done = checkpoint.load_result(pid) if checkpoint is not None else None
+        if done is not None and done["token"] == array_token(centers):
+            centers, moved = jnp.asarray(done["centers"]), done["moved"]
+            iters += 1
+            if moved <= tol * tol:
+                break
+            continue
+        (sums, counts, _, _), _, _, _ = _stream_pass(
+            stream, centers, k, impl,
+            pass_id=pid, checkpoint=checkpoint, guard=guard,
+        )
         means = sums / jnp.maximum(counts, 1.0)[:, None]
         new_centers = jnp.where(counts[:, None] > 0, l2_normalize(means), centers)
         moved = float(jnp.max(jnp.sum((new_centers - centers) ** 2, axis=1)))
+        if checkpoint is not None:
+            checkpoint.save_result(
+                pid,
+                {
+                    "token": array_token(centers),  # keyed by the INPUT centers
+                    "centers": np.asarray(new_centers),
+                    "moved": moved,
+                },
+            )
         centers = new_centers
         iters += 1
         if moved <= tol * tol:
             break
     # final assignment AND the RSS stats from the same streaming pass
     (sums, counts, _, sumsq), idx, best_sim, obj = _stream_pass(
-        stream, centers, k, impl, collect=True
+        stream, centers, k, impl, collect=True,
+        pass_id="kmeans/final", checkpoint=checkpoint, guard=guard,
     )
+    if checkpoint is not None:
+        for i in range(max_iters):  # the run is over: drop iteration results
+            checkpoint.delete_result(f"kmeans/iter{i}")
     rss = metrics.rss_from_assignment_stats(sums, counts, jnp.sum(sumsq), k)
     return KMeansResult(
         centers=centers,
@@ -240,12 +334,20 @@ def kmeans_stream(
     max_iters: int = 8,
     tol: float = 1e-4,
     impl: str = "xla",
+    checkpoint=None,
+    guard=None,
 ) -> KMeansResult:
     """Streaming convenience entry: the paper's random-document init drawn by
     the one-pass reservoir (exact uniform k-sample), then the streaming fit."""
     from repro.core.sampling import reservoir_sample_stream
 
-    rows, _ = reservoir_sample_stream(stream, k, key)
-    return kmeans_fit_stream(
-        stream, l2_normalize(rows), k, max_iters=max_iters, tol=tol, impl=impl
+    rows, _ = reservoir_sample_stream(
+        stream, k, key, checkpoint=checkpoint, guard=guard
     )
+    result = kmeans_fit_stream(
+        stream, l2_normalize(rows), k, max_iters=max_iters, tol=tol, impl=impl,
+        checkpoint=checkpoint, guard=guard,
+    )
+    if checkpoint is not None:
+        checkpoint.delete_result("reservoir")  # the run is over
+    return result

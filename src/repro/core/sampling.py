@@ -77,20 +77,32 @@ def _chunk_scores(key: jax.Array, w: jax.Array, start, chunk: int):
 
 
 def reservoir_sample_stream(
-    stream, s: int, key: jax.Array
+    stream, s: int, key: jax.Array, *, checkpoint=None, guard=None
 ) -> tuple[jax.Array, np.ndarray]:
     """Exact uniform s-sample (without replacement) of a chunk stream's real
     rows, in ONE pass with O(s·d) carry: rows never revisit the stream.
 
     Per-chunk uniforms are keyed by fold_in(key, chunk_index), so the sample
-    is deterministic in (key, chunk size). Returns (rows (s, d) device,
-    global indices (s,) np.int32, sorted by descending score — a uniformly
-    shuffled order).
+    is deterministic in (key, chunk size) — which is also what makes the pass
+    checkpointable: a restored carry replays the identical per-chunk scores
+    for the remaining chunks. The snapshot meta binds the rng key's content,
+    so a snapshot folded under a different key never resumes this pass.
+    Returns (rows (s, d) device, global indices (s,) np.int32, sorted by
+    descending score — a uniformly shuffled order).
     """
     from repro.text.stream import run_pass  # lazy: keeps layering acyclic
 
     if s > stream.n:
         raise ValueError(f"sample size {s} exceeds stream rows {stream.n}")
+
+    meta = None
+    if checkpoint is not None:
+        from repro.resilience import array_token
+
+        meta = {"key": array_token(jax.random.key_data(key)), "s": s}
+        done = checkpoint.load_result("reservoir", meta=meta)
+        if done is not None:
+            return jnp.asarray(done["rows"]), np.asarray(done["gidx"])
 
     def fold(carry, ch, ci):
         scores, gidx = _chunk_scores(
@@ -107,5 +119,15 @@ def reservoir_sample_stream(
             jnp.full((s,), -1, jnp.int32),
             jnp.zeros((s, stream.dim), jnp.float32),
         ),
+        pass_id="reservoir",
+        checkpoint=checkpoint,
+        guard=guard,
+        meta=meta,
     )
+    if checkpoint is not None:
+        checkpoint.save_result(
+            "reservoir",
+            {"rows": np.asarray(rows), "gidx": np.asarray(gidx)},
+            meta=meta,
+        )
     return rows, np.asarray(gidx)

@@ -160,28 +160,63 @@ def kmeans_distributed(
 # ------------------------------------------------------- streaming K-Means
 
 
-def _fold_pass(job, mesh, axes, stream, centers, collect: bool):
+def _fold_pass(
+    job,
+    mesh,
+    axes,
+    stream,
+    centers,
+    collect: bool,
+    *,
+    pass_id: str = "fold",
+    checkpoint=None,
+    guard=None,
+):
     """One streaming pass of the fold job, driven by the shared executor
     (text/stream.run_pass): every chunk is sharded onto the mesh on arrival
     while the prefetcher regenerates the next chunk on a background thread,
     map+combine folds into the per-shard carry, and ONE collective
     (finalize) closes the pass — the combiner discipline at chunk-stream
-    granularity."""
+    granularity.
+
+    The run_pass carry is (job_carry, collected idx blocks): both live in
+    the snapshot, and a restored job carry is re-sharded onto the mesh by
+    ``FoldJob.carry_device`` — a killed distributed pass resumes with every
+    per-shard partial back on its shard."""
     from repro.text.stream import run_pass  # lazy: keeps layering acyclic
 
-    idxs = []
+    meta = None
+    if checkpoint is not None:
+        from repro.resilience import array_token
 
-    def fold(carry, ch, ci):
+        meta = {"centers": array_token(centers)}
+
+    def fold(state, ch, ci):
+        carry, idxs = state
         data = {
             "x": shard_rows(mesh, axes, jnp.asarray(ch.x)),
             "w": shard_rows(mesh, axes, jnp.asarray(ch.w)),
         }
         carry, shard_outs = job.step(carry, data, {"centers": centers})
         if collect:
-            idxs.append(np.asarray(shard_outs["idx"]))
-        return carry
+            idxs = idxs + [np.asarray(shard_outs["idx"])]
+        return carry, idxs
 
-    out = job.finalize(run_pass(stream, fold, None))
+    def restore(host):
+        carry, idxs = host
+        return (None if carry is None else job.carry_device(carry)), idxs
+
+    carry, idxs = run_pass(
+        stream,
+        fold,
+        (None, []),
+        pass_id=pass_id,
+        checkpoint=checkpoint,
+        guard=guard,
+        meta=meta,
+        restore_carry=restore,
+    )
+    out = job.finalize(carry)
     idx = np.concatenate(idxs)[: stream.n] if collect else None
     return out, idx
 
@@ -196,26 +231,62 @@ def kmeans_distributed_stream(
     max_iters: int = 8,
     tol: float = 1e-4,
     impl: str = "xla",
+    checkpoint=None,
+    guard=None,
 ) -> DistClusterResult:
     """Out-of-core PKMeans on the mesh: each iteration is one streaming fold
     job — chunks are sharded on arrival, per-shard partials carry across
     chunks, and the k·d stats cross the wire ONCE per pass instead of once
-    per chunk. Device residency is O(chunk·d / P + k·d) for any n."""
+    per chunk. Device residency is O(chunk·d / P + k·d) for any n.
+
+    Resilience mirrors the single-device ``kmeans_fit_stream``: each
+    iteration's centers persist as a pass result, the in-flight pass
+    snapshots its per-shard carry (re-sharded on restore), and a restart
+    replays only the killed pass — bit-identical to an uninterrupted run
+    on the same mesh."""
     check_stream_shardable(stream, mesh, axes)
     map_combine, kinds = _assign_stats_map(k, impl)
     job = make_fold_job(mesh, axes, map_combine, kinds, name="kmeans_fold")
 
+    if checkpoint is not None:
+        from repro.resilience import array_token
+
     centers = init_centers
     it = 0
     for it in range(1, max_iters + 1):
-        out, _ = _fold_pass(job, mesh, axes, stream, centers, collect=False)
+        pid = f"kmeans/iter{it - 1}"
+        done = checkpoint.load_result(pid) if checkpoint is not None else None
+        if done is not None and done["token"] == array_token(centers):
+            centers, moved = jnp.asarray(done["centers"]), done["moved"]
+            if moved <= tol * tol:
+                break
+            continue
+        out, _ = _fold_pass(
+            job, mesh, axes, stream, centers, collect=False,
+            pass_id=pid, checkpoint=checkpoint, guard=guard,
+        )
         new_centers = _new_centers(out["sums"], out["counts"], centers)
         moved = float(jnp.max(jnp.sum((new_centers - centers) ** 2, axis=1)))
+        if checkpoint is not None:
+            checkpoint.save_result(
+                pid,
+                {
+                    "token": array_token(centers),  # keyed by the INPUT centers
+                    "centers": np.asarray(new_centers),
+                    "moved": moved,
+                },
+            )
         centers = new_centers
         if moved <= tol * tol:
             break
     # final assignment against the converged centers
-    out, idx = _fold_pass(job, mesh, axes, stream, centers, collect=True)
+    out, idx = _fold_pass(
+        job, mesh, axes, stream, centers, collect=True,
+        pass_id="kmeans/final", checkpoint=checkpoint, guard=guard,
+    )
+    if checkpoint is not None:
+        for i in range(max_iters):  # the run is over: drop iteration results
+            checkpoint.delete_result(f"kmeans/iter{i}")
     return DistClusterResult(
         centers=centers,
         assignment=idx,
@@ -300,11 +371,15 @@ def bkc_distributed_stream(
     k: int,
     *,
     impl: str = "xla",
+    checkpoint=None,
+    guard=None,
 ) -> DistClusterResult:
     """Out-of-core distributed BKC: jobs 1 and 3 are streaming fold jobs
     (chunks sharded on arrival, one collective per pass); job 2 runs on the
     replicated O(BigK·d) micro-cluster statistics exactly as the resident
-    path — only the two full passes over the collection ever touch chunks."""
+    path — only the two full passes over the collection ever touch chunks.
+    Pass-1 stats persist as a pass result (ids ``bkc/mc``, ``bkc/final``) so
+    a restart killed in pass 3 never re-streams pass 1."""
     from repro.core.bkc import _group_centers
 
     check_stream_shardable(stream, mesh, axes)
@@ -327,7 +402,19 @@ def bkc_distributed_stream(
         {"n": "sum", "cf1": "sum", "cf2": "sum", "min_sim": "min"},
         name="bkc_mc_fold",
     )
-    stats, _ = _fold_pass(job1, mesh, axes, stream, init_centers, collect=False)
+    stats = None
+    if checkpoint is not None:
+        from repro.resilience import array_token
+
+        mc_meta = {"centers": array_token(init_centers)}
+        stats = checkpoint.load_result("bkc/mc", meta=mc_meta)
+    if stats is None:
+        stats, _ = _fold_pass(
+            job1, mesh, axes, stream, init_centers, collect=False,
+            pass_id="bkc/mc", checkpoint=checkpoint, guard=guard,
+        )
+        if checkpoint is not None:
+            checkpoint.save_result("bkc/mc", dict(stats), meta=mc_meta)
 
     valid = stats["n"] > 0
     mc = MicroClusters(
@@ -343,7 +430,12 @@ def bkc_distributed_stream(
     # ---- job 3: final assignment pass (streamed)
     map_combine, kinds = _assign_stats_map(k, impl)
     job3 = make_fold_job(mesh, axes, map_combine, kinds, name="bkc_final_fold")
-    out, idx = _fold_pass(job3, mesh, axes, stream, centers, collect=True)
+    out, idx = _fold_pass(
+        job3, mesh, axes, stream, centers, collect=True,
+        pass_id="bkc/final", checkpoint=checkpoint, guard=guard,
+    )
+    if checkpoint is not None:
+        checkpoint.delete_result("bkc/mc")  # the run is over
     return DistClusterResult(
         centers=centers,
         assignment=idx,
@@ -489,6 +581,9 @@ def reservoir_sample_distributed_stream(
     stream,
     s: int,
     key: jax.Array,
+    *,
+    checkpoint=None,
+    guard=None,
 ) -> tuple[jax.Array, np.ndarray]:
     """Sharded ONE-pass uniform s-sample of a chunk stream, without
     replacement — the per-shard running top-s reservoir riding the engine's
@@ -514,6 +609,15 @@ def reservoir_sample_distributed_stream(
     check_stream_shardable(stream, mesh, axes)
     n_shards = mesh_axis_size(mesh, axes)
     chunk_local = stream.chunk // n_shards
+
+    meta = None
+    if checkpoint is not None:
+        from repro.resilience import array_token
+
+        meta = {"key": array_token(jax.random.key_data(key)), "s": s}
+        done = checkpoint.load_result("reservoir", meta=meta)
+        if done is not None:
+            return jnp.asarray(done["rows"]), np.asarray(done["gidx"])
 
     def sample_map(data, bcast):
         ws = data["w"]
@@ -556,7 +660,23 @@ def reservoir_sample_distributed_stream(
         carry, _ = job.step(carry, data, bcast)
         return carry
 
-    out = job.finalize(run_pass(stream, fold, None))["sample"]
+    carry = run_pass(
+        stream,
+        fold,
+        None,
+        pass_id="reservoir",
+        checkpoint=checkpoint,
+        guard=guard,
+        meta=meta,
+        restore_carry=lambda host: job.carry_device(host),
+    )
+    out = job.finalize(carry)["sample"]
+    if checkpoint is not None:
+        checkpoint.save_result(
+            "reservoir",
+            {"rows": np.asarray(out["rows"]), "gidx": np.asarray(out["gidx"])},
+            meta=meta,
+        )
     return out["rows"], np.asarray(out["gidx"])
 
 
@@ -572,6 +692,8 @@ def buckshot_distributed_stream(
     impl: str = "xla",
     hac: str = "replicated",
     sample_rows: jax.Array | None = None,
+    checkpoint=None,
+    guard=None,
 ) -> DistClusterResult:
     """Out-of-core distributed Buckshot — the last algorithm of the
     out-of-core distributed matrix.
@@ -588,12 +710,13 @@ def buckshot_distributed_stream(
     check_stream_shardable(stream, mesh, axes)
     if sample_rows is None:
         sample_rows, _ = reservoir_sample_distributed_stream(
-            mesh, axes, stream, sample_size, key
+            mesh, axes, stream, sample_size, key,
+            checkpoint=checkpoint, guard=guard,
         )
     init_centers = _phase1_init_centers(
         mesh, axes, sample_rows, k, impl=impl, hac=hac
     )
-    return kmeans_distributed_stream(
+    result = kmeans_distributed_stream(
         mesh,
         axes,
         stream,
@@ -602,4 +725,9 @@ def buckshot_distributed_stream(
         max_iters=kmeans_iters,
         tol=0.0,
         impl=impl,
+        checkpoint=checkpoint.scoped("buckshot") if checkpoint is not None else None,
+        guard=guard,
     )
+    if checkpoint is not None:
+        checkpoint.delete_result("reservoir")  # the run is over
+    return result

@@ -246,6 +246,8 @@ class FoldJob:
             )
         fold_kinds = [k for k in flat_kinds if k != "shard"]
         self.name = name
+        self.mesh = mesh
+        self.axes = axes
 
         def split(out):
             parts = kinds_def.flatten_up_to(out)
@@ -361,6 +363,27 @@ class FoldJob:
         if carry is None:
             raise ValueError("finalize before any step: empty stream")
         return self._finalize(carry)
+
+    def carry_device(self, host_carry):
+        """Place a host-restored fold carry back onto the mesh.
+
+        A checkpointed fold carry is a tuple of (P, ...) per-shard partials;
+        restoring it on the default device would feed ``step`` a carry whose
+        sharding disagrees with ``carry_spec``. This is the ``restore_carry``
+        hook for run_pass: every leaf goes back to rows-sharded-over-``axes``
+        placement, so the resumed fold is indistinguishable from one that
+        never stopped."""
+        from jax.sharding import NamedSharding
+
+        from repro.resilience import carry_from_host
+
+        def put(v):
+            a = jnp.asarray(v)
+            return jax.device_put(
+                a, NamedSharding(self.mesh, data_spec(self.axes, a.ndim))
+            )
+
+        return carry_from_host(host_carry, device_put=put)
 
 
 def make_fold_job(

@@ -190,6 +190,21 @@ def _auto_prewarm() -> bool:
     return (os.cpu_count() or 1) >= 4
 
 
+def _compile_timeout() -> float | None:
+    """Watchdog on waiting for a pre-warmed compile (``REPRO_COMPILE_TIMEOUT``
+    seconds; unset/empty = wait indefinitely, the seed behavior)."""
+    env = os.environ.get("REPRO_COMPILE_TIMEOUT", "").strip()
+    if not env:
+        return None
+    try:
+        t = float(env)
+    except ValueError:
+        raise ValueError(
+            f"REPRO_COMPILE_TIMEOUT={env!r}: expected seconds (float)"
+        ) from None
+    return t if t > 0 else None
+
+
 class _WarmSlot:
     """A minimal cancellable future (daemon worker + event — no executor, so
     interpreter exit never blocks on queued compiles)."""
@@ -203,8 +218,13 @@ class _WarmSlot:
         self.started = False
         self.cancelled = False
 
-    def result(self):
-        self._ev.wait()
+    def result(self, timeout: float | None = None):
+        """The compiled executable, or None — on cancellation, compile
+        failure, or a worker wedged past ``timeout`` seconds (the round loop
+        then falls back to the plain jitted call instead of hanging the pass
+        behind a stuck compile)."""
+        if not self._ev.wait(timeout):
+            return None
         return self.value
 
 
@@ -451,8 +471,10 @@ def _boruvka_rounds(
             # pre-warmed AOT executable for this round's shapes if it landed
             # (or will land — result() blocks only on THIS round's compile);
             # None falls back to the jitted call (compiles synchronously).
+            # REPRO_COMPILE_TIMEOUT bounds the wait: a wedged compile worker
+            # degrades to the jit fallback instead of hanging the round loop.
             slot = warm[r] if warm is not None else None
-            ex = slot.result() if slot is not None else None
+            ex = slot.result(_compile_timeout()) if slot is not None else None
             data = {"rows": xs_p, "labels": labels_p, "rowid": rowid_p,
                     "comp": comp_p}
             bcast = {"xs": xs, "all_labels": labels,

@@ -1,0 +1,54 @@
+"""Fault tolerance for the streaming executor (DESIGN.md §12).
+
+The paper's MapReduce/Spark hosts re-execute failed map tasks for free; this
+package is that guarantee rebuilt over the repo's single-scan pass discipline.
+Because every streaming pass carries a monoid (DESIGN.md §10-§11), the carry
+IS a complete mid-pass snapshot — so checkpoint/resume, per-chunk retry, and
+guarded numerics all attach at ONE choke point, ``text/stream.run_pass``:
+
+  - ``Checkpointer`` (checkpoint.py): snapshots ``(pass_id, chunk_idx,
+    carry)`` every N chunks; a SIGKILLed job resumes mid-pass bit-identical.
+  - ``RetryPolicy`` (policy.py): producer-side exceptions become per-chunk
+    retries with bounded exponential backoff; fail-fast after K attempts
+    raises ``StreamFault`` with chunk attribution.
+  - Watchdogs: a wedged producer raises ``StreamTimeout`` (with the chunk
+    index being waited on) instead of hanging the pass forever.
+  - ``guard="finite"``: a cheap isfinite reduction over the carry after every
+    fold; a NaN/Inf chunk raises ``GuardError`` naming the pass and chunk
+    instead of silently poisoning every downstream carry.
+
+Deterministic fault injection for all of the above lives in
+``repro/testing/faults.py`` (the ``REPRO_FAULTS`` knob).
+"""
+
+from repro.resilience.checkpoint import (
+    Checkpointer,
+    DiskCheckpointer,
+    MemoryCheckpointer,
+    array_token,
+    carry_fingerprint,
+    carry_to_host,
+    carry_from_host,
+)
+from repro.resilience.policy import (
+    GuardError,
+    RetryPolicy,
+    StreamError,
+    StreamFault,
+    StreamTimeout,
+)
+
+__all__ = [
+    "Checkpointer",
+    "DiskCheckpointer",
+    "MemoryCheckpointer",
+    "array_token",
+    "carry_fingerprint",
+    "carry_to_host",
+    "carry_from_host",
+    "GuardError",
+    "RetryPolicy",
+    "StreamError",
+    "StreamFault",
+    "StreamTimeout",
+]

@@ -1,0 +1,310 @@
+"""Checkpointed streaming passes (DESIGN.md §12).
+
+Because every pass carries a monoid, the carry after chunk i is a COMPLETE
+mid-pass state: snapshotting ``(pass_id, next_chunk, carry)`` every N chunks
+and replaying chunks ``>= next_chunk`` on restart reproduces the uninterrupted
+pass bit-for-bit (f32 folds re-execute the identical add sequence; per-chunk
+rng keys are pure functions of the chunk index, so nothing else needs saving).
+
+Two stores share one format:
+  ``MemoryCheckpointer``  in-process dict — tests, and warm restarts of the
+                          ROADMAP's online service process
+  ``DiskCheckpointer``    one pickle file per pass id under a job directory,
+                          written atomically (tmp + ``os.replace``) so a
+                          SIGKILL mid-write can never leave a torn snapshot
+
+Invalidation is structural, not temporal: a snapshot is ignored unless its
+carry FINGERPRINT (array shapes/dtypes with list contents collapsed — lists
+grow as collected per-chunk outputs accumulate) and its caller-provided META
+(stream signature, centers/key digests) both match the restarting pass. A
+stale snapshot therefore degrades to a cold start, never to silent corruption.
+
+Drivers additionally store PASS RESULTS (``save_result``) — the finished
+output of each pass in a multi-pass algorithm (e.g. the centers after K-Means
+iteration i) — so a restart skips completed passes entirely and only the
+killed pass replays from its last snapshot.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import pickle
+import re
+from typing import Any
+
+import numpy as np
+
+_FORMAT_VERSION = 1
+
+
+class _DeviceLeaf:
+    """Host-side stand-in for a ``jax.Array`` carry leaf (picklable)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self, value: np.ndarray):
+        self.value = value
+
+
+def _is_jax_array(leaf: Any) -> bool:
+    import jax
+
+    return isinstance(leaf, jax.Array)
+
+
+def carry_to_host(carry: Any) -> Any:
+    """Carry pytree -> picklable host pytree (device leaves -> _DeviceLeaf).
+
+    ``np.asarray`` of an f32 device array is exact, so the round trip through
+    a snapshot preserves every accumulator bit."""
+    import jax
+
+    return jax.tree_util.tree_map(
+        lambda v: _DeviceLeaf(np.asarray(v)) if _is_jax_array(v) else v, carry
+    )
+
+
+def carry_from_host(host: Any, *, device_put=None) -> Any:
+    """Inverse of ``carry_to_host``. ``device_put`` overrides the placement of
+    restored device leaves (e.g. ``FoldJob.carry_device`` re-shards a fold
+    carry onto its mesh); the default restores to the local default device."""
+    import jax
+    import jax.numpy as jnp
+
+    put = device_put or jnp.asarray
+    return jax.tree_util.tree_map(
+        lambda v: put(v.value) if isinstance(v, _DeviceLeaf) else v,
+        host,
+        is_leaf=lambda v: isinstance(v, _DeviceLeaf),
+    )
+
+
+def carry_fingerprint(carry: Any) -> str:
+    """Structural signature of a carry: array shapes/dtypes, container shape.
+
+    List CONTENTS are collapsed to ``[*]`` — collected per-chunk outputs live
+    in lists that grow every fold, so a snapshot taken at chunk i must still
+    match the (empty-list) initial carry of the restarting pass."""
+
+    def sig(obj: Any) -> str:
+        if isinstance(obj, np.ndarray) or _is_jax_array(obj):
+            return f"a{tuple(obj.shape)}:{np.dtype(obj.dtype).name}"
+        if isinstance(obj, dict):
+            items = ",".join(f"{k}={sig(v)}" for k, v in sorted(obj.items()))
+            return "{" + items + "}"
+        if isinstance(obj, tuple):
+            return "(" + ",".join(sig(v) for v in obj) + ")"
+        if isinstance(obj, list):
+            return "[*]"
+        return type(obj).__name__
+
+    return sig(carry)
+
+
+def array_token(arr: Any) -> str:
+    """Content digest of an array — binds a snapshot to the broadcast state
+    it was folded under (centers, rng key), not just its shape."""
+    a = np.ascontiguousarray(np.asarray(arr))
+    return hashlib.sha1(a.tobytes() + str(a.dtype).encode()).hexdigest()
+
+
+class Checkpointer:
+    """Snapshot store base class; subclasses provide ``_put/_get/_del``.
+
+    ``every`` is the snapshot cadence in chunks. Mid-pass snapshots and
+    pass results share the store under distinct key namespaces."""
+
+    def __init__(self, *, every: int = 8):
+        if every <= 0:
+            raise ValueError(f"checkpoint cadence must be positive, got {every}")
+        self.every = int(every)
+
+    # -- storage primitives (override) ------------------------------------
+    def _put(self, key: str, payload: bytes) -> None:
+        raise NotImplementedError
+
+    def _get(self, key: str) -> bytes | None:
+        raise NotImplementedError
+
+    def _del(self, key: str) -> None:
+        raise NotImplementedError
+
+    # -- mid-pass snapshots ------------------------------------------------
+    def save(
+        self,
+        pass_id: str,
+        *,
+        chunk: int,
+        carry_host: Any,
+        fingerprint: str,
+        meta: dict | None = None,
+    ) -> None:
+        state = {
+            "version": _FORMAT_VERSION,
+            "pass_id": pass_id,
+            "chunk": int(chunk),
+            "carry": carry_host,
+            "fingerprint": fingerprint,
+            "meta": meta or {},
+        }
+        self._put(f"snap/{pass_id}", pickle.dumps(state, protocol=4))
+
+    def load(
+        self, pass_id: str, *, fingerprint: str, meta: dict | None = None
+    ) -> dict | None:
+        """Return the snapshot dict iff it matches this pass, else None.
+
+        A torn/corrupt/mismatched snapshot is treated as absent (cold start):
+        resilience must never make a restart LESS likely to succeed."""
+        raw = self._get(f"snap/{pass_id}")
+        if raw is None:
+            return None
+        try:
+            state = pickle.loads(raw)
+        except Exception:
+            return None
+        if (
+            not isinstance(state, dict)
+            or state.get("version") != _FORMAT_VERSION
+            or state.get("pass_id") != pass_id
+            or state.get("fingerprint") != fingerprint
+            or state.get("meta") != (meta or {})
+        ):
+            return None
+        return state
+
+    def delete(self, pass_id: str) -> None:
+        """Drop the mid-pass snapshot (the pass completed)."""
+        self._del(f"snap/{pass_id}")
+
+    # -- pass-level results ------------------------------------------------
+    def save_result(self, pass_id: str, value: Any, *, meta: dict | None = None) -> None:
+        """Record a completed pass's output so a restart skips the pass."""
+        state = {
+            "version": _FORMAT_VERSION,
+            "pass_id": pass_id,
+            "value": carry_to_host(value),
+            "meta": meta or {},
+        }
+        self._put(f"result/{pass_id}", pickle.dumps(state, protocol=4))
+
+    def load_result(self, pass_id: str, *, meta: dict | None = None) -> Any | None:
+        raw = self._get(f"result/{pass_id}")
+        if raw is None:
+            return None
+        try:
+            state = pickle.loads(raw)
+        except Exception:
+            return None
+        if (
+            not isinstance(state, dict)
+            or state.get("version") != _FORMAT_VERSION
+            or state.get("pass_id") != pass_id
+            or state.get("meta") != (meta or {})
+        ):
+            return None
+        return carry_from_host(state["value"])
+
+    def delete_result(self, pass_id: str) -> None:
+        """Drop a stored pass result (the whole run completed)."""
+        self._del(f"result/{pass_id}")
+
+    # -- composition -------------------------------------------------------
+    def scoped(self, prefix: str) -> "Checkpointer":
+        """A view that prefixes every pass id — nested drivers (Buckshot's
+        phase-2 K-Means) checkpoint under their own namespace in one store."""
+        return _ScopedCheckpointer(self, prefix)
+
+
+class _ScopedCheckpointer(Checkpointer):
+    def __init__(self, parent: Checkpointer, prefix: str):
+        super().__init__(every=parent.every)
+        self._parent = parent
+        self._prefix = prefix.rstrip("/")
+
+    def _key(self, key: str) -> str:
+        kind, _, pid = key.partition("/")
+        return f"{kind}/{self._prefix}/{pid}"
+
+    def _put(self, key: str, payload: bytes) -> None:
+        self._parent._put(self._key(key), payload)
+
+    def _get(self, key: str) -> bytes | None:
+        return self._parent._get(self._key(key))
+
+    def _del(self, key: str) -> None:
+        self._parent._del(self._key(key))
+
+
+class MemoryCheckpointer(Checkpointer):
+    """In-process snapshot store (tests; warm restarts within one process)."""
+
+    def __init__(self, *, every: int = 8):
+        super().__init__(every=every)
+        self._store: dict[str, bytes] = {}
+
+    def _put(self, key: str, payload: bytes) -> None:
+        self._store[key] = payload
+
+    def _get(self, key: str) -> bytes | None:
+        return self._store.get(key)
+
+    def _del(self, key: str) -> None:
+        self._store.pop(key, None)
+
+    def clear(self) -> None:
+        self._store.clear()
+
+
+def _safe_name(key: str) -> str:
+    """Filesystem name for a store key: readable slug + collision-proof hash."""
+    slug = re.sub(r"[^A-Za-z0-9_.-]+", "_", key)[:80]
+    return f"{slug}.{hashlib.sha1(key.encode()).hexdigest()[:12]}.ckpt"
+
+
+class DiskCheckpointer(Checkpointer):
+    """One atomically-written pickle file per key under a job directory.
+
+    The directory is PER JOB: two jobs sharing a directory with identical
+    pass ids, carry shapes, and meta would resume from each other's state —
+    the fingerprint/meta checks catch shape and parameter drift, not
+    same-shaped different data."""
+
+    def __init__(self, directory: str | os.PathLike, *, every: int = 8):
+        super().__init__(every=every)
+        self.directory = os.fspath(directory)
+        os.makedirs(self.directory, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.directory, _safe_name(key))
+
+    def _put(self, key: str, payload: bytes) -> None:
+        path = self._path(key)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "wb") as f:
+            f.write(payload)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)  # atomic: a kill mid-write leaves only the tmp
+
+    def _get(self, key: str) -> bytes | None:
+        try:
+            with open(self._path(key), "rb") as f:
+                return f.read()
+        except OSError:
+            return None
+
+    def _del(self, key: str) -> None:
+        try:
+            os.remove(self._path(key))
+        except OSError:
+            pass
+
+    def clear(self) -> None:
+        for name in os.listdir(self.directory):
+            if name.endswith(".ckpt"):
+                try:
+                    os.remove(os.path.join(self.directory, name))
+                except OSError:
+                    pass

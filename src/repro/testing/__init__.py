@@ -1,0 +1,10 @@
+"""Test-support machinery importable from production wiring points.
+
+``repro.testing.faults`` is the deterministic fault injector behind the
+resilience layer's test suite (tests/test_faults.py) and the ``REPRO_FAULTS``
+env knob; the streaming executor and the kernel dispatch consult it at their
+choke points with zero overhead when no plan is installed."""
+
+from repro.testing.faults import FaultPlan, InjectedFault, active, clear, inject, install
+
+__all__ = ["FaultPlan", "InjectedFault", "active", "clear", "inject", "install"]

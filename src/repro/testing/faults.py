@@ -1,0 +1,232 @@
+"""Deterministic fault injection for the streaming/resilience layer.
+
+A ``FaultPlan`` is a list of faults, each armed at a deterministic trigger
+point, parsed from a compact spec (the ``REPRO_FAULTS`` env var or
+``FaultPlan.from_spec``):
+
+  kind        effect at the trigger point
+  ----        -------------------------------------------------------------
+  raise       producer raises ``InjectedFault`` (exercises retry/fail-fast)
+  nan / inf   chunk block's first row corrupted with NaN / Inf (guard path)
+  stall:T     producer sleeps T seconds before yielding (watchdog path)
+  kill        ``SIGKILL`` the process (checkpoint/resume path)
+  pallas      the kernel dispatch's Pallas path raises (degradation path)
+
+Chunk faults address their trigger as ``@cI`` (chunk index I within ANY pass
+— every pass re-counts from 0) or ``@gN`` (the Nth chunk SERVED process-wide,
+0-based across passes — the way to hit a specific later pass). An ``xK``
+suffix bounds how many times the fault fires (default 1; ``x*`` = unlimited),
+which is what lets a bounded retry succeed after K injected failures.
+
+Spec grammar (comma-separated entries)::
+
+  raise@c2x3     raise on chunk 2 of any pass, first 3 times it is produced
+  nan@g17        NaN-corrupt the 18th chunk served in this process
+  stall@c0:1.5   sleep 1.5 s before yielding chunk 0 (once)
+  kill@g9        SIGKILL before yielding the 10th chunk served
+  pallasx2       first 2 Pallas dispatches raise
+
+Wiring: ``text/stream.run_pass``'s producer calls ``on_chunk`` for every
+chunk it generates; ``kernels/ops`` calls ``pallas_fault`` before entering a
+Pallas path. Both consult ``active()``, which is ``None`` unless a plan was
+installed programmatically (``install``/``inject``) or via ``REPRO_FAULTS``
+— the no-plan fast path is a single global read.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+import signal
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Iterator
+
+import numpy as np
+
+_CHUNK_KINDS = ("raise", "nan", "inf", "stall", "kill")
+_KINDS = _CHUNK_KINDS + ("pallas",)
+
+
+class InjectedFault(RuntimeError):
+    """The exception raised by 'raise' and 'pallas' faults."""
+
+
+@dataclass
+class Fault:
+    kind: str
+    # trigger: ("c", chunk_index) | ("g", global_serve_index) | None (pallas)
+    where: tuple[str, int] | None = None
+    seconds: float = 0.0  # stall duration
+    times: int | None = 1  # remaining firings; None = unlimited
+    fired: int = 0  # total firings so far (test observability)
+
+    def _matches(self, ci: int, served: int) -> bool:
+        if self.where is None:
+            return False
+        mode, at = self.where
+        return (ci if mode == "c" else served) == at
+
+    def _consume(self) -> bool:
+        if self.times is not None:
+            if self.times <= 0:
+                return False
+            self.times -= 1
+        self.fired += 1
+        return True
+
+
+def _parse_entry(entry: str) -> Fault:
+    entry = entry.strip()
+    if not entry:
+        raise ValueError("empty fault entry")
+    head, _, where = entry.partition("@")
+    # stall carries its duration after ':' on the TRIGGER part (stall@c0:1.5)
+    seconds = 0.0
+    if where and ":" in where:
+        where, _, secs = where.partition(":")
+        seconds = float(secs)
+    times: int | None = 1
+
+    # xK multiplicity may suffix either the kind (pallasx2) or the trigger
+    # (raise@c2x3); '*' means unlimited
+    def split_times(s: str) -> tuple[str, int | None, bool]:
+        if "x" in s:
+            base, _, mult = s.rpartition("x")
+            if mult == "*":
+                return base, None, True
+            if mult.isdigit():
+                return base, int(mult), True
+        return s, 1, False
+
+    kind, t, found = split_times(head)
+    if found:
+        times = t
+    if where:
+        where2, t, found = split_times(where)
+        if found:
+            where, times = where2, t
+    kind = kind.strip()
+    if kind not in _KINDS:
+        raise ValueError(
+            f"unknown fault kind {kind!r} in {entry!r}; expected one of {_KINDS}"
+        )
+    if kind == "pallas":
+        if where:
+            raise ValueError(f"'pallas' fault takes no trigger address: {entry!r}")
+        return Fault(kind=kind, where=None, times=times)
+    if not where:
+        raise ValueError(f"chunk fault {entry!r} needs a trigger: @cI or @gN")
+    mode, idx = where[0], where[1:]
+    if mode not in ("c", "g"):
+        if where.isdigit():  # bare integer = chunk index
+            mode, idx = "c", where
+        else:
+            raise ValueError(f"bad trigger {where!r} in {entry!r}: use @cI or @gN")
+    if not idx.isdigit():
+        raise ValueError(f"bad trigger index {idx!r} in {entry!r}")
+    if kind == "stall" and seconds <= 0:
+        raise ValueError(f"stall fault {entry!r} needs a duration: stall@c0:SECS")
+    return Fault(kind=kind, where=(mode, int(idx)), seconds=seconds, times=times)
+
+
+@dataclass
+class FaultPlan:
+    """A set of armed faults plus the process-wide served-chunk counter."""
+
+    faults: list[Fault] = field(default_factory=list)
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+    served: int = 0  # chunks handed to any pass so far (for @gN triggers)
+
+    @classmethod
+    def from_spec(cls, spec: str) -> "FaultPlan":
+        entries = [e for e in spec.split(",") if e.strip()]
+        if not entries:
+            raise ValueError(f"empty REPRO_FAULTS spec: {spec!r}")
+        return cls(faults=[_parse_entry(e) for e in entries])
+
+    # -- chunk-side --------------------------------------------------------
+    def on_chunk(self, pass_id: str, ci: int, ch: Any) -> Any:
+        """Apply armed faults to one produced chunk; called from the producer
+        (so 'raise' is a producer-side exception the retry layer sees)."""
+        with self._lock:
+            served = self.served
+            self.served += 1
+            hits = [
+                f
+                for f in self.faults
+                if f.kind in _CHUNK_KINDS and f._matches(ci, served) and f._consume()
+            ]
+        for f in hits:
+            if f.kind == "kill":
+                os.kill(os.getpid(), signal.SIGKILL)
+            if f.kind == "stall":
+                time.sleep(f.seconds)
+            elif f.kind == "raise":
+                raise InjectedFault(
+                    f"injected producer fault at pass {pass_id!r} chunk {ci}"
+                )
+            elif f.kind in ("nan", "inf"):
+                x = np.array(np.asarray(ch.x), dtype=np.float32, copy=True)
+                x[0, :] = np.nan if f.kind == "nan" else np.inf
+                ch = ch._replace(x=x)
+        return ch
+
+    # -- kernel-side -------------------------------------------------------
+    def pallas_fault(self) -> None:
+        """Raise ``InjectedFault`` if a 'pallas' fault is armed."""
+        with self._lock:
+            hit = any(
+                f.kind == "pallas" and f._consume() for f in self.faults
+            )
+        if hit:
+            raise InjectedFault("injected Pallas kernel failure")
+
+    # -- observability -----------------------------------------------------
+    def fired(self, kind: str | None = None) -> int:
+        with self._lock:
+            return sum(f.fired for f in self.faults if kind in (None, f.kind))
+
+
+_UNSET = object()
+_PLAN: Any = _UNSET
+_PLAN_LOCK = threading.Lock()
+
+
+def active() -> FaultPlan | None:
+    """The installed plan, initialized lazily from ``REPRO_FAULTS``."""
+    global _PLAN
+    if _PLAN is _UNSET:
+        with _PLAN_LOCK:
+            if _PLAN is _UNSET:
+                spec = os.environ.get("REPRO_FAULTS", "").strip()
+                _PLAN = FaultPlan.from_spec(spec) if spec else None
+    return _PLAN
+
+
+def install(plan: FaultPlan | str) -> FaultPlan:
+    """Install a plan programmatically (tests); returns it for observability."""
+    global _PLAN
+    if isinstance(plan, str):
+        plan = FaultPlan.from_spec(plan)
+    with _PLAN_LOCK:
+        _PLAN = plan
+    return plan
+
+
+def clear() -> None:
+    """Remove any installed plan (env spec will NOT re-arm until re-install)."""
+    global _PLAN
+    with _PLAN_LOCK:
+        _PLAN = None
+
+
+@contextlib.contextmanager
+def inject(spec: str) -> Iterator[FaultPlan]:
+    """Scoped installation: ``with inject("raise@c2"): ...``."""
+    plan = install(spec)
+    try:
+        yield plan
+    finally:
+        clear()

@@ -24,6 +24,8 @@ every streaming entry point run on it reproduces the resident oracle.
 
 from __future__ import annotations
 
+import functools
+import math
 import os
 import queue
 import threading
@@ -190,6 +192,15 @@ class CorpusStream:
 # mapped device dispatch) while the caller's thread folds chunk i. The chunk
 # ORDER and VALUES are untouched — prefetch on/off runs the identical compute
 # graph, so results are bit-identical either way (tests/test_streaming.py).
+#
+# run_pass is also where the resilience layer attaches (DESIGN.md §12):
+# producer-side faults retry per chunk with bounded backoff (RetryPolicy), a
+# consumer-side watchdog turns a wedged producer into StreamTimeout, an
+# optional Checkpointer snapshots (pass_id, chunk, carry) every N chunks so a
+# SIGKILLed pass resumes mid-stream bit-identically, and guard="finite"
+# raises GuardError with pass/chunk attribution the moment NaN/Inf reaches
+# the carry. Deterministic fault injection (repro/testing/faults.py) hooks
+# the producer right where real faults would occur.
 
 
 class _Raise:
@@ -207,12 +218,18 @@ _END = object()  # producer-exhausted sentinel
 
 class _PrefetchIter:
     """Iterator over ``source`` with up to ``depth`` items produced ahead by
-    a daemon thread. ``close()`` stops the producer early (abandoned pass)."""
+    a daemon thread. ``close()`` stops the producer early (abandoned pass).
 
-    def __init__(self, source: Iterator[Any], depth: int):
+    ``timeout`` arms the consumer-side watchdog: if the producer goes silent
+    past the deadline, ``__next__`` raises ``queue.Empty`` (run_pass maps it
+    to ``StreamTimeout`` with pass/chunk attribution) instead of blocking the
+    pass forever behind a wedged generator."""
+
+    def __init__(self, source: Iterator[Any], depth: int, *, timeout: float | None = None):
         self._q: "queue.Queue[Any]" = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._done = False
+        self._timeout = timeout
         self._thread = threading.Thread(
             target=self._produce, args=(source,), daemon=True,
             name="corpus-stream-prefetch",
@@ -243,7 +260,8 @@ class _PrefetchIter:
     def __next__(self) -> Any:
         if self._done:
             raise StopIteration
-        item = self._q.get()
+        # watchdog: queue.Empty escapes to run_pass, which owns attribution
+        item = self._q.get(timeout=self._timeout)
         if item is _END:
             self._done = True
             self._thread.join()
@@ -310,7 +328,112 @@ def iter_chunks(stream, *, prefetch: Any = None) -> Iterator[StreamChunk]:
     return _PrefetchIter(it, depth)
 
 
-def run_pass(stream, fold: Callable, carry: Any, *, prefetch: Any = None):
+def _chunk_source(
+    stream, pass_id: str, policy, start_chunk: int
+) -> Iterator[tuple[int, StreamChunk]]:
+    """Producer generator: ``(chunk_index, chunk)`` pairs with per-chunk
+    retry and fault injection applied.
+
+    Chunks below ``start_chunk`` (already folded into a restored checkpoint
+    carry) are regenerated and discarded — recompute-over-store means replay
+    is always legal, and the fold never sees them. A producer exception at
+    chunk ``ci`` re-opens the pass (fresh ``stream.chunks()``), fast-forwards
+    to ``ci``, and retries after exponential backoff; past the budget the
+    original error surfaces (retries=0, the seed behavior) or a StreamFault
+    with chunk attribution (retries>0, the cause chained)."""
+    from repro.testing import faults as _faults
+
+    def opened(skip: int) -> Iterator[tuple[int, StreamChunk]]:
+        plan = _faults.active()
+        it = stream.chunks()
+        for ci, ch in enumerate(it):
+            if plan is not None:
+                ch = plan.on_chunk(pass_id, ci, ch)
+            if ci < skip:
+                continue
+            yield ci, ch
+
+    ci = start_chunk
+    attempts = 0
+    it = opened(start_chunk)
+    while True:
+        try:
+            item = next(it)
+        except StopIteration:
+            return
+        except Exception as e:
+            attempts += 1
+            if attempts > policy.retries:
+                if policy.retries == 0:
+                    raise  # fail-fast: surface the original error unwrapped
+                from repro.resilience import StreamFault
+
+                raise StreamFault(pass_id, ci, attempts, e) from e
+            policy.sleep(attempts)
+            it = opened(ci)  # replay up to the failed chunk, then retry it
+        else:
+            ci = item[0] + 1
+            attempts = 0
+            yield item
+
+
+@functools.lru_cache(maxsize=256)
+def _finite_reducer(shape: tuple, dtype: str):
+    import jax
+    import jax.numpy as jnp
+
+    del shape, dtype  # cache key only: one compiled reducer per leaf shape
+    return jax.jit(lambda a: jnp.all(jnp.isfinite(a)))
+
+
+def _carry_finite(carry: Any, seen: set | None = None) -> bool:
+    """All inexact array leaves of the carry are finite. Device leaves reduce
+    to a scalar on device (one tiny compiled all-isfinite per leaf shape);
+    only the scalar syncs to the host.
+
+    ``seen`` memoizes verified HOST arrays by identity across folds: collected
+    per-chunk output blocks accumulate in carry lists but never mutate, so
+    re-scanning them every chunk would make the guard O(chunks²) over a pass.
+    Device leaves are always re-checked (the running accumulators DO change)."""
+    import jax
+
+    for leaf in jax.tree_util.tree_leaves(carry):
+        if isinstance(leaf, jax.Array):
+            if jnp_issubdtype_inexact(leaf.dtype) and not bool(
+                _finite_reducer(tuple(leaf.shape), str(leaf.dtype))(leaf)
+            ):
+                return False
+        elif isinstance(leaf, np.ndarray):
+            if seen is not None and id(leaf) in seen:
+                continue
+            if jnp_issubdtype_inexact(leaf.dtype) and not np.all(np.isfinite(leaf)):
+                return False
+            if seen is not None:
+                seen.add(id(leaf))
+        elif isinstance(leaf, float):
+            if not math.isfinite(leaf):
+                return False
+    return True
+
+
+def jnp_issubdtype_inexact(dtype) -> bool:
+    return np.issubdtype(np.dtype(dtype), np.inexact)
+
+
+def run_pass(
+    stream,
+    fold: Callable,
+    carry: Any,
+    *,
+    prefetch: Any = None,
+    pass_id: str = "pass",
+    checkpoint: Any = None,
+    retry: Any = None,
+    timeout: Any = None,
+    guard: Any = None,
+    meta: dict | None = None,
+    restore_carry: Callable | None = None,
+):
     """One full pass over ``stream``: ``fold(carry, chunk, index) -> carry``.
 
     ``fold`` runs on the caller's thread (device dispatch + any host-side
@@ -318,13 +441,96 @@ def run_pass(stream, fold: Callable, carry: Any, *, prefetch: Any = None):
     next chunk — the host chunk-generation and device fold of consecutive
     chunks overlap. Returns the final carry (the initial ``carry`` for an
     n == 0 stream). The pass is closed on any exit, so a fold that raises
-    does not leave a producer thread spinning."""
-    it = iter_chunks(stream, prefetch=prefetch)
+    does not leave a producer thread spinning.
+
+    Resilience (all opt-in; defaults preserve the seed behavior exactly):
+      pass_id     names the pass for checkpoint keys and error attribution.
+      checkpoint  a resilience.Checkpointer: snapshots (chunk, carry) every
+                  ``checkpoint.every`` folded chunks; on entry a matching
+                  snapshot restores the carry and the producer skips already-
+                  folded chunks, so a killed pass resumes bit-identically.
+                  The snapshot is deleted when the pass completes.
+      retry       RetryPolicy | int budget | None (env REPRO_STREAM_RETRIES;
+                  default 0 = fail fast with the original exception).
+      timeout     producer watchdog seconds (env REPRO_STREAM_TIMEOUT;
+                  default off) -> StreamTimeout instead of a hang. Forces the
+                  source through a (depth >= 1) prefetch thread so the
+                  deadline can be enforced from the consumer side.
+      guard       'finite' (env REPRO_STREAM_GUARD) checks every inexact
+                  carry leaf after each fold -> GuardError(pass, chunk).
+      meta        extra snapshot-validity keys (stream signature is always
+                  included): a snapshot folded under different centers or rng
+                  key must not resume this pass.
+      restore_carry  host-snapshot -> live carry override (distributed folds
+                  re-shard restored leaves onto their mesh).
+    """
+    from repro.resilience import policy as _policy
+
+    policy = _policy.RetryPolicy.resolve(retry)
+    wd = _policy.resolve_timeout(timeout)
+    guard = _policy.resolve_guard(guard)
+
+    start_chunk = 0
+    fingerprint = None
+    full_meta = None
+    if checkpoint is not None:
+        from repro.resilience import (
+            carry_fingerprint,
+            carry_from_host,
+            carry_to_host,
+        )
+
+        fingerprint = carry_fingerprint(carry)
+        full_meta = {
+            "stream": {"n": stream.n, "dim": stream.dim, "chunk": stream.chunk},
+            **(meta or {}),
+        }
+        snap = checkpoint.load(pass_id, fingerprint=fingerprint, meta=full_meta)
+        if snap is not None:
+            restore = restore_carry or carry_from_host
+            carry = restore(snap["carry"])
+            start_chunk = snap["chunk"]
+
+    source = _chunk_source(stream, pass_id, policy, start_chunk)
+    depth = _resolve_prefetch(prefetch)
+    if wd is not None:
+        depth = max(depth, 1)  # the watchdog needs the producer on a thread
+    it: Any = _PrefetchIter(source, depth, timeout=wd) if depth > 0 else source
+    expect = start_chunk
+    guard_seen: set | None = set() if guard == "finite" else None
     try:
-        for ci, ch in enumerate(it):
+        while True:
+            try:
+                item = next(it)
+            except StopIteration:
+                break
+            except queue.Empty:
+                from repro.resilience import StreamTimeout
+
+                raise StreamTimeout(pass_id, expect, wd) from None
+            ci, ch = item
             carry = fold(carry, ch, ci)
+            if guard == "finite" and not _carry_finite(carry, guard_seen):
+                from repro.resilience import GuardError
+
+                raise GuardError(pass_id, ci)
+            expect = ci + 1
+            if (
+                checkpoint is not None
+                and expect % checkpoint.every == 0
+                and expect < stream.n_chunks
+            ):
+                checkpoint.save(
+                    pass_id,
+                    chunk=expect,
+                    carry_host=carry_to_host(carry),
+                    fingerprint=fingerprint,
+                    meta=full_meta,
+                )
     finally:
         close = getattr(it, "close", None)
         if close is not None:
             close()
+    if checkpoint is not None:
+        checkpoint.delete(pass_id)  # pass completed: snapshot is stale
     return carry

@@ -43,7 +43,15 @@ def document_frequency(counts: jax.Array) -> jax.Array:
 
 @jax.jit
 def tfidf(counts: jax.Array) -> jax.Array:
-    """counts (n,d) -> L2-normalized tf-idf vectors (n,d) f32."""
+    """counts (n,d) -> L2-normalized tf-idf vectors (n,d) f32.
+
+    n == 0 is rejected up front (a shape, so checked at trace time): idf
+    would silently be log(0/...) = -inf for every term, and downstream
+    clustering would ingest an empty matrix as if it were data. An all-zero
+    ROW (an empty document) is fine — it stays the zero vector through the
+    zero-safe L2 normalize."""
+    if counts.shape[0] == 0:
+        raise ValueError("tfidf: empty collection (n == 0 documents)")
     df = document_frequency(counts)
     x = tf_weight(counts) * idf_weight(df, counts.shape[0])
     x = jnp.maximum(x, 0.0)  # idf can go negative for terms in >n/e docs
@@ -81,32 +89,39 @@ def tfidf_distributed(
 # ------------------------------------------------------------------ streaming
 
 
-def df_stream(stream) -> tuple[jax.Array, jax.Array]:
+def df_stream(stream, *, checkpoint=None, guard=None) -> tuple[jax.Array, jax.Array]:
     """Pass 1 over a count-chunk stream: fold (df (d,), n) — exact, since
     both are integer-valued however the chunks split the rows. Driven by the
-    shared streaming executor, so chunk generation overlaps the fold."""
+    shared streaming executor, so chunk generation overlaps the fold.
+    Checkpoints under pass id ``tfidf/df``; guard='finite' attributes the
+    first non-finite accumulator to its chunk."""
     from repro.text.stream import run_pass
+
+    if stream.n == 0:
+        raise ValueError("df_stream: empty stream (n == 0 documents)")
 
     def fold(carry, ch, ci):
         part = _df_map({"counts": jnp.asarray(ch.x), "w": jnp.asarray(ch.w)}, ())
-        if carry is None:
-            return part["df"], part["n"]
         df, n = carry
         return df + part["df"], n + part["n"]
 
-    out = run_pass(stream, fold, None)
-    if out is None:
-        raise ValueError("df_stream: empty stream")
-    return out
+    return run_pass(
+        stream,
+        fold,
+        (jnp.zeros((stream.dim,), jnp.float32), jnp.float32(0.0)),
+        pass_id="tfidf/df",
+        checkpoint=checkpoint,
+        guard=guard,
+    )
 
 
-def tfidf_stream(stream):
+def tfidf_stream(stream, *, checkpoint=None, guard=None):
     """Streaming two-pass tf-idf: (df, n) fold, then a lazily-mapped stream
     whose chunks are rescaled + L2-normalized on device on arrival.
 
     Bit-exact vs resident ``tfidf``: pass 1 folds integers, pass 2 applies
     the identical elementwise rescale per chunk. Peak residency O(chunk·d)."""
-    df, n = df_stream(stream)
+    df, n = df_stream(stream, checkpoint=checkpoint, guard=guard)
     return stream.map(lambda c, w: _rescale(jnp.asarray(c), df, n))
 
 
