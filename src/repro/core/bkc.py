@@ -120,7 +120,9 @@ def join_to_groups(mc: MicroClusters, k: int) -> tuple[jax.Array, jax.Array]:
     return final, s
 
 
-@functools.partial(jax.jit, static_argnames=("big_k", "k", "impl", "fused"))
+@functools.partial(
+    jax.jit, static_argnames=("big_k", "k", "impl", "fused", "bounded")
+)
 def bkc_fit(
     x: jax.Array,
     init_centers: jax.Array,
@@ -129,14 +131,35 @@ def bkc_fit(
     *,
     impl: str = "xla",
     fused: bool = True,
+    bounded: bool = False,
 ) -> BKCResult:
-    """Run BKC-for-documents given the BigK sampled center documents."""
-    mc, _, _ = build_microclusters(x, init_centers, big_k, impl=impl, fused=fused)
+    """Run BKC-for-documents given the BigK sampled center documents.
+
+    bounded=True routes both data passes through the bound-pruned op with
+    sentinel bounds (single passes carry nothing to prune with; the payoff is
+    the two-level center index on the Pallas path, where BigK is large)."""
+    mc, _, _ = build_microclusters(
+        x, init_centers, big_k, impl=impl, fused=fused, bounded=bounded
+    )
     centers, group, s = _group_centers(mc, k)
 
     # Step 7: final assignment pass (one K-Means-style iteration); the fused
     # path reuses the same single read of x for assignment AND the RSS stats.
-    if fused:
+    if bounded and fused:
+        index = (
+            ops.build_center_index(centers)
+            if ops._resolve(impl) != "xla"
+            else None
+        )
+        st = ops.assign_stats_bounded(
+            x, centers, ops.bounds_identity(x.shape[0]),
+            jnp.zeros((k,), jnp.float32), index=index, impl=impl,
+        )
+        idx, best_sim = st.idx, st.best_sim
+        rss = metrics.rss_from_assignment_stats(
+            st.sums, st.counts, jnp.sum(st.sumsq), k
+        )
+    elif fused:
         st = ops.assign_stats(x, centers, impl=impl)
         idx, best_sim = st.idx, st.best_sim
         rss = metrics.rss_from_assignment_stats(
@@ -164,11 +187,15 @@ def bkc(
     *,
     impl: str = "xla",
     fused: bool = True,
+    bounded: bool | None = None,
 ) -> BKCResult:
     """Convenience entry point: sample BigK center documents, then fit."""
     idx = jax.random.choice(key, x.shape[0], shape=(big_k,), replace=False)
     centers = l2_normalize(x[idx])
-    return bkc_fit(x, centers, big_k, k, impl=impl, fused=fused)
+    return bkc_fit(
+        x, centers, big_k, k, impl=impl, fused=fused,
+        bounded=ops.bounds_enabled(bounded),
+    )
 
 
 # ------------------------------------------------------------------ streaming
@@ -195,6 +222,7 @@ def bkc_fit_stream(
     impl: str = "xla",
     checkpoint=None,
     guard=None,
+    bounded: bool | None = None,
 ) -> BKCResult:
     """Out-of-core BKC: passes 1 and 3 stream chunks through the fused kernel
     with carried accumulators (the shared executor prefetches chunk i+1 while
@@ -205,8 +233,13 @@ def bkc_fit_stream(
     ``checkpoint``/``guard`` thread down to both data passes (pass ids
     ``bkc/mc`` and ``bkc/final``); pass-1's micro-cluster stats are stored as
     a pass result so a restart killed in pass 3 skips pass 1 entirely.
+    ``bounded`` (None → REPRO_ASSIGN_BOUNDS) routes both passes through the
+    bound-pruned op with sentinel bounds.
     """
     from repro.core.kmeans import _stream_pass
+
+    bounded = ops.bounds_enabled(bounded)
+    use_index = bounded and ops._resolve(impl) != "xla"
 
     # pass 1: micro-cluster statistics folded over the stream (CF additivity
     # is the chunk monoid — the same merge_stats the distributed combiner uses)
@@ -219,10 +252,16 @@ def bkc_fit_stream(
     if mc_stats is not None:
         sums, counts, min_sim, sumsq = mc_stats
     else:
-        (sums, counts, min_sim, sumsq), _, _, _ = _stream_pass(
+        index = (
+            ops.build_center_index(jnp.asarray(init_centers))
+            if use_index else None
+        )
+        out = _stream_pass(
             stream, init_centers, big_k, impl,
             pass_id="bkc/mc", checkpoint=checkpoint, guard=guard,
+            bounded=bounded, index=index,
         )
+        sums, counts, min_sim, sumsq = out.stats
         if checkpoint is not None:
             checkpoint.save_result(
                 "bkc/mc", (sums, counts, min_sim, sumsq), meta=mc_meta
@@ -239,10 +278,14 @@ def bkc_fit_stream(
     centers, group, s = _group_centers(mc, k)
 
     # pass 3: final assignment — same streaming pass against the k centers
-    (sums, counts, _, sumsq), idx, best_sim, obj = _stream_pass(
+    index = ops.build_center_index(centers) if use_index else None
+    out = _stream_pass(
         stream, centers, k, impl, collect=True,
         pass_id="bkc/final", checkpoint=checkpoint, guard=guard,
+        bounded=bounded, index=index,
     )
+    sums, counts, _, sumsq = out.stats
+    idx, best_sim, obj = out.idx, out.best_sim, out.objective
     if checkpoint is not None:
         checkpoint.delete_result("bkc/mc")  # the run is over
     rss = metrics.rss_from_assignment_stats(sums, counts, jnp.sum(sumsq), k)
@@ -266,6 +309,7 @@ def bkc_stream(
     impl: str = "xla",
     checkpoint=None,
     guard=None,
+    bounded: bool | None = None,
 ) -> BKCResult:
     """Streaming convenience entry: the BigK random center documents come
     from the one-pass reservoir (exact uniform sample), then the fit."""
@@ -276,7 +320,7 @@ def bkc_stream(
     )
     result = bkc_fit_stream(
         stream, l2_normalize(rows), big_k, k, impl=impl,
-        checkpoint=checkpoint, guard=guard,
+        checkpoint=checkpoint, guard=guard, bounded=bounded,
     )
     if checkpoint is not None:
         checkpoint.delete_result("reservoir")  # the run is over

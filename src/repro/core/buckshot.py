@@ -87,7 +87,8 @@ def buckshot_phase1(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "kmeans_iters", "impl", "fused", "hac")
+    jax.jit,
+    static_argnames=("k", "kmeans_iters", "impl", "fused", "hac", "bounded"),
 )
 def buckshot_fit(
     x: jax.Array,
@@ -98,12 +99,17 @@ def buckshot_fit(
     impl: str = "xla",
     fused: bool = True,
     hac: str = "boruvka",
+    bounded: bool = False,
 ) -> BuckshotResult:
-    """Run Buckshot given the sampled document indices (s static via shape)."""
+    """Run Buckshot given the sampled document indices (s static via shape).
+
+    bounded=True runs phase 2 through the bound-pruned assignment (the few
+    Buckshot iterations still benefit: iteration 1 seeds the bounds carry,
+    iterations 2-3 prune against it)."""
     labels, init_centers = buckshot_phase1(x, sample_idx, k, impl=impl, hac=hac)
     km = kmeans_fit(
         x, init_centers, k, max_iters=kmeans_iters, tol=0.0, impl=impl,
-        fused=fused,
+        fused=fused, bounded=bounded,
     )
     return BuckshotResult(
         kmeans=km,
@@ -123,6 +129,7 @@ def buckshot(
     impl: str = "xla",
     fused: bool = True,
     hac: str = "boruvka",
+    bounded: bool | None = None,
 ) -> BuckshotResult:
     """Paper defaults: s = sqrt(k n), 2-3 assignment iterations."""
     n = x.shape[0]
@@ -130,7 +137,7 @@ def buckshot(
     sample_idx = sampling.sample_indices(key, n, s)
     return buckshot_fit(
         x, sample_idx, k, kmeans_iters=kmeans_iters, impl=impl, fused=fused,
-        hac=hac,
+        hac=hac, bounded=ops.bounds_enabled(bounded),
     )
 
 
@@ -149,6 +156,7 @@ def buckshot_stream(
     hac: str = "boruvka",
     checkpoint=None,
     guard=None,
+    bounded: bool | None = None,
 ) -> BuckshotResult:
     """Out-of-core Buckshot: the s = √(kn) sample comes from a one-pass
     running top-s reservoir over the chunk stream (exact uniform sample —
@@ -174,7 +182,7 @@ def buckshot_stream(
     km = kmeans_fit_stream(
         stream, init_centers, k, max_iters=kmeans_iters, tol=tol, impl=impl,
         checkpoint=checkpoint.scoped("buckshot") if checkpoint is not None else None,
-        guard=guard,
+        guard=guard, bounded=bounded,
     )
     if checkpoint is not None:
         checkpoint.delete_result("reservoir")  # the run is over

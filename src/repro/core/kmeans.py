@@ -44,12 +44,12 @@ def init_random_centers(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
 
 
 @jax.jit
-def _split_empty_centers(
+def _split_empty_centers_info(
     centers: jax.Array,
     sums: jax.Array,
     counts: jax.Array,
     sumsq: jax.Array,
-) -> jax.Array:
+) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Reseed empty clusters by splitting the highest-RSS cluster.
 
     Without this, ``counts == 0`` keeps the stale center forever (the
@@ -60,13 +60,26 @@ def _split_empty_centers(
     fused kernel already carries), and empty center j becomes the donor's
     center nudged along basis vector j mod d — deterministic, and distinct
     per empty slot so the split centers immediately partition the donor's
-    members. No-op when no cluster is empty."""
+    members. No-op when no cluster is empty.
+
+    Returns (new_centers, donor id, (k,) bool reseeded-slot mask) — the extra
+    outputs drive the bounded path's carry invalidation."""
     k, d = centers.shape
     rss_c = sumsq - jnp.sum(sums * sums, axis=1) / jnp.maximum(counts, 1.0)
     donor = jnp.argmax(jnp.where(counts > 0, rss_c, -jnp.inf))
     nudge = 1e-3 * jax.nn.one_hot(jnp.arange(k) % d, d, dtype=centers.dtype)
     split = l2_normalize(centers[donor][None, :] + nudge)
-    return jnp.where((counts <= 0)[:, None], split, centers)
+    reseeded = counts <= 0
+    return jnp.where(reseeded[:, None], split, centers), donor, reseeded
+
+
+def _split_empty_centers(
+    centers: jax.Array,
+    sums: jax.Array,
+    counts: jax.Array,
+    sumsq: jax.Array,
+) -> jax.Array:
+    return _split_empty_centers_info(centers, sums, counts, sumsq)[0]
 
 
 @functools.partial(jax.jit, static_argnames=("k", "impl", "fused", "reseed"))
@@ -108,8 +121,58 @@ def kmeans_step(
     return new_centers, idx, best_sim, sums, counts
 
 
+@functools.partial(jax.jit, static_argnames=("k", "impl", "reseed"))
+def kmeans_step_bounded(
+    x: jax.Array,
+    centers: jax.Array,
+    prev_centers: jax.Array,
+    bounds: "ops.Bounds",
+    k: int,
+    *,
+    impl: str = "xla",
+    reseed: str | None = None,
+    index: "ops.CenterIndex | None" = None,
+) -> tuple[jax.Array, "ops.AssignStatsBounded"]:
+    """Bound-pruned sibling of ``kmeans_step``: one fused iteration that
+    deflates the carried per-row bounds by the per-center drift
+    ``‖centers - prev_centers‖`` and lets provably-settled rows skip the
+    center sweep (ops.assign_stats_bounded). Labels, stats, and therefore the
+    new centers are bit-identical to the brute-force step for ANY carried
+    bounds state.
+
+    reseed="split" additionally forces the refreshed bounds of every row
+    assigned to the DONOR or to a RESEEDED slot back to the unknown sentinel:
+    those rows' carried similarities reference centers the reseed just
+    rewrote, and the sentinel is deterministic where trusting drift-deflation
+    against a split center would be fragile.
+
+    Returns (new_centers, AssignStatsBounded) — ``st.bounds`` is the carry
+    for the next step, valid against ``centers``.
+    """
+    if reseed not in (None, "split"):
+        raise ValueError(f"unknown reseed policy {reseed!r}: expected 'split'")
+    drift = jnp.sqrt(jnp.sum((centers - prev_centers) ** 2, axis=1))
+    st = ops.assign_stats_bounded(
+        x, centers, bounds, drift, index=index, impl=impl
+    )
+    means = st.sums / jnp.maximum(st.counts, 1.0)[:, None]
+    new_centers = jnp.where(
+        st.counts[:, None] > 0, l2_normalize(means), centers
+    )
+    if reseed == "split":
+        new_centers, donor, reseeded = _split_empty_centers_info(
+            new_centers, st.sums, st.counts, st.sumsq
+        )
+        any_reseed = jnp.any(reseeded)
+        stale = jnp.logical_or(
+            reseeded[st.idx], jnp.logical_and(any_reseed, st.idx == donor)
+        )
+        st = st._replace(bounds=ops.bounds_invalidate(st.bounds, stale))
+    return new_centers, st
+
+
 @functools.partial(
-    jax.jit, static_argnames=("k", "max_iters", "impl", "fused")
+    jax.jit, static_argnames=("k", "max_iters", "impl", "fused", "bounded")
 )
 def kmeans_fit(
     x: jax.Array,
@@ -120,8 +183,51 @@ def kmeans_fit(
     tol: float = 1e-4,
     impl: str = "xla",
     fused: bool = True,
+    bounded: bool = False,
 ) -> KMeansResult:
-    """Iterate to convergence (max center movement < tol) or max_iters."""
+    """Iterate to convergence (max center movement < tol) or max_iters.
+
+    bounded=True threads the Elkan/Hamerly bounds carry through the
+    while_loop (kmeans_step_bounded) — same centers and labels bit-for-bit,
+    with the per-row sweep pruned once drift settles.
+    """
+    if bounded:
+        use_index = ops._resolve(impl) != "xla"
+
+        def bcond(state):
+            moved = jnp.max(jnp.sum((state[0] - state[1]) ** 2, axis=1))
+            return jnp.logical_and(state[2] < max_iters, moved > tol * tol)
+
+        def bbody(state):
+            centers, prev, it, bounds = state
+            index = ops.build_center_index(centers) if use_index else None
+            new_centers, st = kmeans_step_bounded(
+                x, centers, prev, bounds, k, impl=impl, index=index
+            )
+            return new_centers, centers, it + 1, st.bounds
+
+        far = init_centers + 10.0  # force first iteration
+        centers, prev, iters, bounds = jax.lax.while_loop(
+            bcond,
+            bbody,
+            (init_centers, far, jnp.int32(0), ops.bounds_identity(x.shape[0])),
+        )
+        # final assignment AND the RSS stats, still bound-pruned
+        drift = jnp.sqrt(jnp.sum((centers - prev) ** 2, axis=1))
+        index = ops.build_center_index(centers) if use_index else None
+        st = ops.assign_stats_bounded(
+            x, centers, bounds, drift, index=index, impl=impl
+        )
+        return KMeansResult(
+            centers=centers,
+            assignment=st.idx,
+            best_sim=st.best_sim,
+            rss=metrics.rss_from_assignment_stats(
+                st.sums, st.counts, jnp.sum(st.sumsq), k
+            ),
+            objective=metrics.cosine_objective(st.best_sim),
+            iterations=iters,
+        )
 
     def cond(state):
         centers, prev, it = state
@@ -169,12 +275,16 @@ def kmeans(
     init_centers: jax.Array | None = None,
     impl: str = "xla",
     fused: bool = True,
+    bounded: bool | None = None,
 ) -> KMeansResult:
-    """Convenience entry point with the paper's random-document init."""
+    """Convenience entry point with the paper's random-document init.
+
+    ``bounded=None`` defers to REPRO_ASSIGN_BOUNDS (ops.bounds_enabled)."""
     if init_centers is None:
         init_centers = init_random_centers(key, x, k)
     return kmeans_fit(
-        x, init_centers, k, max_iters=max_iters, tol=tol, impl=impl, fused=fused
+        x, init_centers, k, max_iters=max_iters, tol=tol, impl=impl,
+        fused=fused, bounded=ops.bounds_enabled(bounded),
     )
 
 
@@ -194,6 +304,37 @@ def _stream_fold_chunk(carry, x, w, centers, *, impl: str = "xla"):
     return ops.merge_stats(carry, st), (st.idx, st.best_sim, obj)
 
 
+@functools.partial(jax.jit, static_argnames=("impl",))
+def _stream_fold_chunk_bounded(
+    carry, x, w, centers, bounds, drift, *, index=None, impl: str = "xla"
+):
+    """Bounded sibling of ``_stream_fold_chunk``: same monoid fold, plus the
+    refreshed per-row bounds and the chunk's (pruned, real) row counts for the
+    analytic prune_rate."""
+    st = ops.assign_stats_bounded(
+        x, centers, bounds, drift, w, index=index, impl=impl
+    )
+    obj = jnp.sum(w * (1.0 - st.best_sim))  # pad rows carry w == 0
+    real = w > 0
+    pruned = jnp.sum(jnp.logical_and(st.pruned, real).astype(jnp.float32))
+    rows = jnp.sum(real.astype(jnp.float32))
+    return ops.merge_stats(carry, st), (
+        st.idx, st.best_sim, obj, st.bounds, pruned, rows,
+    )
+
+
+class StreamPassOut(NamedTuple):
+    """What one streaming assignment pass returns (see ``_stream_pass``)."""
+
+    stats: tuple  # (sums, counts, min_sim, sumsq) folded accumulators
+    idx: "np.ndarray | None"  # (n,) collected labels (None unless collect)
+    best_sim: "np.ndarray | None"  # (n,) collected similarities
+    objective: jax.Array  # weighted cosine objective
+    bounds: "list | None"  # per-chunk host (idx, lo, hi) blocks (bounded only)
+    pruned: float  # real rows that skipped the sweep (bounded only)
+    rows: float  # real rows seen (bounded only)
+
+
 def _stream_pass(
     stream,
     centers,
@@ -204,13 +345,24 @@ def _stream_pass(
     pass_id: str = "kmeans/pass",
     checkpoint=None,
     guard=None,
+    bounded: bool = False,
+    bounds_blocks=None,
+    drift=None,
+    index=None,
 ):
     """One full pass driven by the shared streaming executor
     (text/stream.run_pass): the prefetcher's background thread regenerates
     chunk i+1 while the device folds chunk i into the carried f32
-    accumulators — O(chunk + k·d) resident. Returns (stats carry, idx (n,)
-    np, best_sim (n,) np, objective) — idx/best_sim None unless
-    ``collect``.
+    accumulators — O(chunk + k·d) resident. Returns a ``StreamPassOut``;
+    idx/best_sim are None unless ``collect``.
+
+    bounded=True carries per-row Elkan/Hamerly bounds: each chunk's prior
+    bounds come from ``bounds_blocks`` (the previous pass's per-chunk host
+    blocks, aligned by chunk index — the unknown sentinel when absent),
+    deflated by the (k,) ``drift`` vector, and the refreshed blocks ride the
+    fold carry, so a checkpointed snapshot captures them and a killed pass
+    resumes with its pruning state intact. ``run_pass`` and its prefetcher
+    stay oblivious — bounds are fold-carry state, never producer state.
 
     The collected idx/sim blocks live INSIDE the run_pass carry (not a
     closure): a checkpointed snapshot then captures them with the stats, so
@@ -218,6 +370,57 @@ def _stream_pass(
     intact — bit-identical to the uninterrupted run."""
     from repro.resilience import array_token
     from repro.text.stream import run_pass  # lazy: keeps layering acyclic
+
+    if bounded:
+        drift_dev = (
+            jnp.zeros((k,), jnp.float32) if drift is None else jnp.asarray(drift)
+        )
+
+        def fold(state, ch, ci):
+            carry, obj, idxs, sims, blocks, pruned, rows = state
+            x = jnp.asarray(ch.x)
+            if bounds_blocks is not None and ci < len(bounds_blocks):
+                bi, bl, bh = bounds_blocks[ci]
+                b = ops.Bounds(
+                    jnp.asarray(bi), jnp.asarray(bl), jnp.asarray(bh)
+                )
+            else:
+                b = ops.bounds_identity(x.shape[0])
+            carry, (idx, sim, o, nb, p, r) = _stream_fold_chunk_bounded(
+                carry, x, jnp.asarray(ch.w), centers, b, drift_dev,
+                index=index, impl=impl,
+            )
+            blocks = blocks + [
+                (np.asarray(nb.idx), np.asarray(nb.lo), np.asarray(nb.hi))
+            ]
+            if collect:
+                idxs = idxs + [np.asarray(idx)]
+                sims = sims + [np.asarray(sim)]
+            return carry, obj + o, idxs, sims, blocks, pruned + p, rows + r
+
+        carry, obj, idxs, sims, blocks, pruned, rows = run_pass(
+            stream,
+            fold,
+            (
+                ops.stats_identity(k, stream.dim), jnp.float32(0.0),
+                [], [], [], jnp.float32(0.0), jnp.float32(0.0),
+            ),
+            pass_id=pass_id,
+            checkpoint=checkpoint,
+            guard=guard,
+            meta={"centers": array_token(centers)}
+            if checkpoint is not None
+            else None,
+        )
+        return StreamPassOut(
+            stats=carry,
+            idx=np.concatenate(idxs)[: stream.n] if collect else None,
+            best_sim=np.concatenate(sims)[: stream.n] if collect else None,
+            objective=obj,
+            bounds=blocks,
+            pruned=float(pruned),
+            rows=float(rows),
+        )
 
     def fold(state, ch, ci):
         carry, obj, idxs, sims = state
@@ -238,13 +441,14 @@ def _stream_pass(
         guard=guard,
         meta={"centers": array_token(centers)} if checkpoint is not None else None,
     )
-    if not collect:
-        return carry, None, None, obj
-    return (
-        carry,
-        np.concatenate(idxs)[: stream.n],
-        np.concatenate(sims)[: stream.n],
-        obj,
+    return StreamPassOut(
+        stats=carry,
+        idx=np.concatenate(idxs)[: stream.n] if collect else None,
+        best_sim=np.concatenate(sims)[: stream.n] if collect else None,
+        objective=obj,
+        bounds=None,
+        pruned=0.0,
+        rows=0.0,
     )
 
 
@@ -258,6 +462,8 @@ def kmeans_fit_stream(
     impl: str = "xla",
     checkpoint=None,
     guard=None,
+    bounded: bool | None = None,
+    profile: dict | None = None,
 ) -> KMeansResult:
     """Out-of-core ``kmeans_fit``: the host drives iterations, each iteration
     is one streaming pass through the fused assign+stats kernel with carried
@@ -273,24 +479,45 @@ def kmeans_fit_stream(
     mid-stream — the final model is bit-identical to an uninterrupted run.
     ``guard='finite'`` raises GuardError naming the pass/chunk that first
     produced a non-finite accumulator.
+
+    ``bounded`` (None → REPRO_ASSIGN_BOUNDS) carries per-chunk Elkan/Hamerly
+    bounds between iterations — per-row streaming state, O(chunk) extra
+    residency, same labels and centers bit-for-bit. Iterations replayed from
+    checkpoint results reset the carry to the unknown sentinel (only the
+    prune rate suffers; exactness never depends on the bounds state).
+    ``profile`` (a dict) receives a per-iteration ``prune_rate`` list.
     """
     from repro.resilience import array_token
 
+    bounded = ops.bounds_enabled(bounded)
+    use_index = bounded and ops._resolve(impl) != "xla"
     centers = init_centers
+    prev_centers = None  # None -> unknown drift -> sentinel bounds
+    bblocks = None
     iters = 0
+
+    def _drift():
+        if prev_centers is None:
+            return None
+        return jnp.sqrt(jnp.sum((centers - prev_centers) ** 2, axis=1))
+
     for i in range(max_iters):
         pid = f"kmeans/iter{i}"
         done = checkpoint.load_result(pid) if checkpoint is not None else None
         if done is not None and done["token"] == array_token(centers):
             centers, moved = jnp.asarray(done["centers"]), done["moved"]
+            prev_centers, bblocks = None, None  # no pass ran: bounds unknown
             iters += 1
             if moved <= tol * tol:
                 break
             continue
-        (sums, counts, _, _), _, _, _ = _stream_pass(
+        index = ops.build_center_index(jnp.asarray(centers)) if use_index else None
+        out = _stream_pass(
             stream, centers, k, impl,
             pass_id=pid, checkpoint=checkpoint, guard=guard,
+            bounded=bounded, bounds_blocks=bblocks, drift=_drift(), index=index,
         )
+        sums, counts = out.stats[0], out.stats[1]
         means = sums / jnp.maximum(counts, 1.0)[:, None]
         new_centers = jnp.where(counts[:, None] > 0, l2_normalize(means), centers)
         moved = float(jnp.max(jnp.sum((new_centers - centers) ** 2, axis=1)))
@@ -303,15 +530,29 @@ def kmeans_fit_stream(
                     "moved": moved,
                 },
             )
+        if profile is not None and bounded:
+            profile.setdefault("prune_rate", []).append(
+                out.pruned / max(out.rows, 1.0)
+            )
+        prev_centers, bblocks = centers, out.bounds
         centers = new_centers
         iters += 1
         if moved <= tol * tol:
             break
     # final assignment AND the RSS stats from the same streaming pass
-    (sums, counts, _, sumsq), idx, best_sim, obj = _stream_pass(
+    index = ops.build_center_index(jnp.asarray(centers)) if use_index else None
+    out = _stream_pass(
         stream, centers, k, impl, collect=True,
         pass_id="kmeans/final", checkpoint=checkpoint, guard=guard,
+        bounded=bounded, bounds_blocks=bblocks, drift=_drift(), index=index,
     )
+    (sums, counts, _, sumsq), idx, best_sim, obj = (
+        out.stats, out.idx, out.best_sim, out.objective,
+    )
+    if profile is not None and bounded:
+        profile.setdefault("prune_rate", []).append(
+            out.pruned / max(out.rows, 1.0)
+        )
     if checkpoint is not None:
         for i in range(max_iters):  # the run is over: drop iteration results
             checkpoint.delete_result(f"kmeans/iter{i}")

@@ -32,7 +32,7 @@ class MicroClusters(NamedTuple):
     valid: jax.Array  # (K,) bool, False for empty micro-clusters
 
 
-@functools.partial(jax.jit, static_argnames=("big_k", "impl", "fused"))
+@functools.partial(jax.jit, static_argnames=("big_k", "impl", "fused", "bounded"))
 def build_microclusters(
     x: jax.Array,
     centers: jax.Array,
@@ -40,17 +40,32 @@ def build_microclusters(
     *,
     impl: str = "xla",
     fused: bool = True,
+    bounded: bool = False,
 ) -> tuple[MicroClusters, jax.Array, jax.Array]:
     """BKC steps 2-3: assign every doc to its most similar center, build MCs.
 
     fused=True gets assignment + CF1 + counts + CF2 + min_sim from ONE
     assign_stats pass (no separate label_stats / segment_sum / segment_min
     passes over x); fused=False keeps the legacy multi-pass path for
-    benchmarks.
+    benchmarks. bounded=True routes the single pass through the bound-pruned
+    op (sentinel bounds — no carry to prune with, but the Pallas path gets
+    the two-level center index, which is where BigK ≫ k pays).
 
     Returns (micro_clusters, idx, best_sim).
     """
-    if fused:
+    if bounded and fused:
+        index = (
+            ops.build_center_index(centers)
+            if ops._resolve(impl) != "xla"
+            else None
+        )
+        st = ops.assign_stats_bounded(
+            x, centers, ops.bounds_identity(x.shape[0]),
+            jnp.zeros((big_k,), jnp.float32), index=index, impl=impl,
+        )
+        idx, best_sim = st.idx, st.best_sim
+        sums, counts, cf2, min_sim = st.sums, st.counts, st.sumsq, st.min_sim
+    elif fused:
         st = ops.assign_stats(x, centers, impl=impl)
         idx, best_sim = st.idx, st.best_sim
         sums, counts, cf2, min_sim = st.sums, st.counts, st.sumsq, st.min_sim

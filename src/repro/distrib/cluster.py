@@ -106,6 +106,81 @@ def _assign_stats_map(
     return map_combine, kinds
 
 
+def _assign_stats_bounded_map(
+    k: int, impl: str, *, use_index: bool = False, unit_norm: bool = False
+):
+    """Bound-pruned twin of ``_assign_stats_map``.
+
+    The triangle-inequality bounds are SHARD-LOCAL row state: each shard's
+    rows carry their own (idx, lo, hi) triple in the data pytree (kind
+    'shard' on the way out), so pruning never adds a collective — the only
+    new wire traffic is the replicated (k,) drift vector riding the existing
+    bcast, and a scalar 'pruned' count joining the one psum per pass.
+    ``use_index`` expects the two-level center index (perm, group_of) in the
+    bcast (replicated (k,) i32 vectors).
+    """
+
+    def map_combine(data, bcast):
+        x, w = data["x"], data["w"]
+        bounds = ops.Bounds(data["bidx"], data["blo"], data["bhi"])
+        index = (
+            ops.CenterIndex(bcast["perm"], bcast["group_of"])
+            if use_index else None
+        )
+        st = ops.assign_stats_bounded(
+            x, bcast["centers"], bounds, bcast["drift"], w,
+            index=index, impl=impl,
+        )
+        if unit_norm:
+            sq = jnp.sum(w)  # |x_i|^2 == 1 for real rows, 0 for padding
+        else:
+            sq = jnp.sum(st.sumsq)
+        obj = jnp.sum(w * (1.0 - st.best_sim))
+        return {
+            "sums": st.sums,
+            "counts": st.counts,
+            "sq": sq,
+            "obj": obj,
+            "pruned": jnp.sum(
+                jnp.where(jnp.logical_and(st.pruned, w > 0), 1.0, 0.0)
+            ),
+            "idx": st.idx,
+            "sim": st.best_sim,
+            "bidx": st.bounds.idx,
+            "blo": st.bounds.lo,
+            "bhi": st.bounds.hi,
+        }
+
+    kinds = {
+        "sums": "sum",
+        "counts": "sum",
+        "sq": "sum",
+        "obj": "sum",
+        "pruned": "sum",
+        "idx": "shard",
+        "sim": "shard",
+        "bidx": "shard",
+        "blo": "shard",
+        "bhi": "shard",
+    }
+    return map_combine, kinds
+
+
+def _bounds_bcast(centers, drift, index):
+    """Broadcast pytree for a bounded job: drift defaults to the zero vector
+    (sentinel bounds never prune, so zeros are exact for a first pass)."""
+    k = centers.shape[0]
+    b = {
+        "centers": centers,
+        "drift": (
+            jnp.zeros((k,), jnp.float32) if drift is None else drift
+        ),
+    }
+    if index is not None:
+        b["perm"], b["group_of"] = index.perm, index.group_of
+    return b
+
+
 def _new_centers(sums, counts, old):
     means = sums / jnp.maximum(counts, 1.0)[:, None]
     return jnp.where(counts[:, None] > 0, l2_normalize(means), old)
@@ -130,24 +205,54 @@ def kmeans_distributed(
     max_iters: int = 8,
     tol: float = 1e-4,
     impl: str = "xla",
+    bounded: bool | None = None,
 ) -> DistClusterResult:
     """PKMeans: the host drives iterations (the paper's job-chaining driver);
-    each iteration is ONE MapReduce job on the mesh."""
-    map_combine, kinds = _assign_stats_map(k, impl)
+    each iteration is ONE MapReduce job on the mesh.
+
+    ``bounded`` (None → REPRO_ASSIGN_BOUNDS) carries shard-local
+    triangle-inequality bounds between iterations: the per-row (idx, lo, hi)
+    state rides the data pytree, the (k,) drift vector rides the bcast, and
+    labels stay bit-identical to the brute sweep."""
+    bounded = ops.bounds_enabled(bounded)
+    if bounded:
+        use_index = ops._resolve(impl) != "xla"
+        map_combine, kinds = _assign_stats_bounded_map(
+            k, impl, use_index=use_index
+        )
+    else:
+        use_index = False
+        map_combine, kinds = _assign_stats_map(k, impl)
     job = make_job(mesh, axes, map_combine, kinds, name="kmeans_iter")
 
+    def run(centers, bounds, drift):
+        if not bounded:
+            return job({"x": x, "w": w}, {"centers": centers})
+        index = ops.build_center_index(centers) if use_index else None
+        data = {
+            "x": x, "w": w,
+            "bidx": bounds.idx, "blo": bounds.lo, "bhi": bounds.hi,
+        }
+        return job(data, _bounds_bcast(centers, drift, index))
+
     centers = init_centers
+    bounds = ops.bounds_identity(x.shape[0]) if bounded else None
+    drift = None
     out = None
     it = 0
     for it in range(1, max_iters + 1):
-        out = job({"x": x, "w": w}, {"centers": centers})
+        out = run(centers, bounds, drift)
+        if bounded:
+            bounds = ops.Bounds(out["bidx"], out["blo"], out["bhi"])
         new_centers = _new_centers(out["sums"], out["counts"], centers)
         moved = float(jnp.max(jnp.sum((new_centers - centers) ** 2, axis=1)))
+        if bounded:
+            drift = jnp.sqrt(jnp.sum((new_centers - centers) ** 2, axis=1))
         centers = new_centers
         if moved <= tol * tol:
             break
     # final assignment against the converged centers
-    out = job({"x": x, "w": w}, {"centers": centers})
+    out = run(centers, bounds, drift)
     return DistClusterResult(
         centers=centers,
         assignment=out["idx"],
@@ -171,6 +276,10 @@ def _fold_pass(
     pass_id: str = "fold",
     checkpoint=None,
     guard=None,
+    bounded: bool = False,
+    bounds_blocks=None,
+    drift=None,
+    index=None,
 ):
     """One streaming pass of the fold job, driven by the shared executor
     (text/stream.run_pass): every chunk is sharded onto the mesh on arrival
@@ -179,10 +288,18 @@ def _fold_pass(
     (finalize) closes the pass — the combiner discipline at chunk-stream
     granularity.
 
-    The run_pass carry is (job_carry, collected idx blocks): both live in
-    the snapshot, and a restored job carry is re-sharded onto the mesh by
-    ``FoldJob.carry_device`` — a killed distributed pass resumes with every
-    per-shard partial back on its shard."""
+    ``bounded`` expects the job to be built from ``_assign_stats_bounded_map``:
+    each chunk's prior (idx, lo, hi) bounds come from ``bounds_blocks[ci]``
+    (host numpy triples, or the sentinel when None — e.g. a fresh run or a
+    resume past a result-skip), ride the data pytree onto the chunk's own
+    shards, and come back per chunk as 'shard' outputs — nothing about
+    pruning crosses the wire beyond the (k,) drift bcast and the scalar
+    pruned count already inside the one finalize collective.
+
+    The run_pass carry is (job_carry, collected idx blocks, bounds blocks):
+    all live in the snapshot, and a restored job carry is re-sharded onto
+    the mesh by ``FoldJob.carry_device`` — a killed distributed pass resumes
+    with every per-shard partial back on its shard."""
     from repro.text.stream import run_pass  # lazy: keeps layering acyclic
 
     meta = None
@@ -191,25 +308,49 @@ def _fold_pass(
 
         meta = {"centers": array_token(centers)}
 
+    bcast = (
+        _bounds_bcast(centers, drift, index)
+        if bounded else {"centers": centers}
+    )
+
     def fold(state, ch, ci):
-        carry, idxs = state
+        carry, idxs, bblocks = state
         data = {
             "x": shard_rows(mesh, axes, jnp.asarray(ch.x)),
             "w": shard_rows(mesh, axes, jnp.asarray(ch.w)),
         }
-        carry, shard_outs = job.step(carry, data, {"centers": centers})
+        if bounded:
+            if bounds_blocks is None:
+                b = ops.bounds_identity(ch.x.shape[0])
+                bi, bl, bh = b.idx, b.lo, b.hi
+            else:
+                bi, bl, bh = bounds_blocks[ci]
+            data["bidx"] = shard_rows(mesh, axes, jnp.asarray(bi))
+            data["blo"] = shard_rows(mesh, axes, jnp.asarray(bl))
+            data["bhi"] = shard_rows(mesh, axes, jnp.asarray(bh))
+        carry, shard_outs = job.step(carry, data, bcast)
         if collect:
             idxs = idxs + [np.asarray(shard_outs["idx"])]
-        return carry, idxs
+        if bounded:
+            bblocks = bblocks + [(
+                np.asarray(shard_outs["bidx"]),
+                np.asarray(shard_outs["blo"]),
+                np.asarray(shard_outs["bhi"]),
+            )]
+        return carry, idxs, bblocks
 
     def restore(host):
-        carry, idxs = host
-        return (None if carry is None else job.carry_device(carry)), idxs
+        carry, idxs, bblocks = host
+        return (
+            (None if carry is None else job.carry_device(carry)),
+            idxs,
+            bblocks,
+        )
 
-    carry, idxs = run_pass(
+    carry, idxs, bblocks = run_pass(
         stream,
         fold,
-        (None, []),
+        (None, [], []),
         pass_id=pass_id,
         checkpoint=checkpoint,
         guard=guard,
@@ -218,7 +359,7 @@ def _fold_pass(
     )
     out = job.finalize(carry)
     idx = np.concatenate(idxs)[: stream.n] if collect else None
-    return out, idx
+    return out, idx, (bblocks if bounded else None)
 
 
 def kmeans_distributed_stream(
@@ -233,6 +374,8 @@ def kmeans_distributed_stream(
     impl: str = "xla",
     checkpoint=None,
     guard=None,
+    bounded: bool | None = None,
+    profile: dict | None = None,
 ) -> DistClusterResult:
     """Out-of-core PKMeans on the mesh: each iteration is one streaming fold
     job — chunks are sharded on arrival, per-shard partials carry across
@@ -243,28 +386,60 @@ def kmeans_distributed_stream(
     iteration's centers persist as a pass result, the in-flight pass
     snapshots its per-shard carry (re-sharded on restore), and a restart
     replays only the killed pass — bit-identical to an uninterrupted run
-    on the same mesh."""
+    on the same mesh. ``bounded`` carries the per-chunk bounds blocks
+    between passes (host numpy, shard-local per row); a resume that skips
+    an iteration via its stored result restarts the NEXT pass from sentinel
+    bounds — labels are bounds-state independent, so still bit-identical.
+    ``profile`` (optional dict) collects per-pass ``prune_rate``."""
     check_stream_shardable(stream, mesh, axes)
-    map_combine, kinds = _assign_stats_map(k, impl)
+    bounded = ops.bounds_enabled(bounded)
+    use_index = bounded and ops._resolve(impl) != "xla"
+    if bounded:
+        map_combine, kinds = _assign_stats_bounded_map(
+            k, impl, use_index=use_index
+        )
+    else:
+        map_combine, kinds = _assign_stats_map(k, impl)
     job = make_fold_job(mesh, axes, map_combine, kinds, name="kmeans_fold")
 
     if checkpoint is not None:
         from repro.resilience import array_token
 
+    def bkwargs(centers, drift, bblocks):
+        if not bounded:
+            return {}
+        return {
+            "bounded": True,
+            "bounds_blocks": bblocks,
+            "drift": drift,
+            "index": ops.build_center_index(centers) if use_index else None,
+        }
+
+    def note_prune(out):
+        if bounded and profile is not None:
+            profile.setdefault("prune_rate", []).append(
+                float(out["pruned"]) / max(stream.n, 1)
+            )
+
     centers = init_centers
+    bblocks = None
+    drift = None
     it = 0
     for it in range(1, max_iters + 1):
         pid = f"kmeans/iter{it - 1}"
         done = checkpoint.load_result(pid) if checkpoint is not None else None
         if done is not None and done["token"] == array_token(centers):
             centers, moved = jnp.asarray(done["centers"]), done["moved"]
+            bblocks, drift = None, None  # skipped pass: restart from sentinel
             if moved <= tol * tol:
                 break
             continue
-        out, _ = _fold_pass(
+        out, _, nb = _fold_pass(
             job, mesh, axes, stream, centers, collect=False,
             pass_id=pid, checkpoint=checkpoint, guard=guard,
+            **bkwargs(centers, drift, bblocks),
         )
+        note_prune(out)
         new_centers = _new_centers(out["sums"], out["counts"], centers)
         moved = float(jnp.max(jnp.sum((new_centers - centers) ** 2, axis=1)))
         if checkpoint is not None:
@@ -276,14 +451,19 @@ def kmeans_distributed_stream(
                     "moved": moved,
                 },
             )
+        if bounded:
+            bblocks = nb
+            drift = jnp.sqrt(jnp.sum((new_centers - centers) ** 2, axis=1))
         centers = new_centers
         if moved <= tol * tol:
             break
     # final assignment against the converged centers
-    out, idx = _fold_pass(
+    out, idx, _ = _fold_pass(
         job, mesh, axes, stream, centers, collect=True,
         pass_id="kmeans/final", checkpoint=checkpoint, guard=guard,
+        **bkwargs(centers, drift, bblocks),
     )
+    note_prune(out)
     if checkpoint is not None:
         for i in range(max_iters):  # the run is over: drop iteration results
             checkpoint.delete_result(f"kmeans/iter{i}")
@@ -309,13 +489,34 @@ def bkc_distributed(
     k: int,
     *,
     impl: str = "xla",
+    bounded: bool | None = None,
 ) -> DistClusterResult:
-    """BKC-for-documents as the paper's three MapReduce jobs."""
+    """BKC-for-documents as the paper's three MapReduce jobs.
+
+    ``bounded`` routes both data jobs through the bound-pruned op with
+    sentinel bounds — single-pass jobs have no carry to prune with, but the
+    Pallas path gets the two-level center index (BigK ≫ k is where the
+    group-skip pays)."""
+    bounded = ops.bounds_enabled(bounded)
+    use_index = bounded and ops._resolve(impl) != "xla"
 
     # ---- job 1: micro-cluster statistics (map+combine: ONE fused kernel per
     # shard yielding n/CF1/CF2/min_sim from a single read; reduce: psum / pmin)
     def mc_map(data, bcast):
-        st = ops.assign_stats(data["x"], bcast["centers"], data["w"], impl=impl)
+        if bounded:
+            index = (
+                ops.CenterIndex(bcast["perm"], bcast["group_of"])
+                if use_index else None
+            )
+            st = ops.assign_stats_bounded(
+                data["x"], bcast["centers"],
+                ops.Bounds(data["bidx"], data["blo"], data["bhi"]),
+                bcast["drift"], data["w"], index=index, impl=impl,
+            )
+        else:
+            st = ops.assign_stats(
+                data["x"], bcast["centers"], data["w"], impl=impl
+            )
         return {
             "n": st.counts,
             "cf1": st.sums,
@@ -330,7 +531,15 @@ def bkc_distributed(
         {"n": "sum", "cf1": "sum", "cf2": "sum", "min_sim": "min"},
         name="bkc_microclusters",
     )
-    stats = job1({"x": x, "w": w}, {"centers": init_centers})
+    if bounded:
+        b = ops.bounds_identity(x.shape[0])
+        index = ops.build_center_index(init_centers) if use_index else None
+        stats = job1(
+            {"x": x, "w": w, "bidx": b.idx, "blo": b.lo, "bhi": b.hi},
+            _bounds_bcast(init_centers, None, index),
+        )
+    else:
+        stats = job1({"x": x, "w": w}, {"centers": init_centers})
 
     valid = stats["n"] > 0
     mc = MicroClusters(
@@ -350,9 +559,21 @@ def bkc_distributed(
     centers = jnp.where(counts[:, None] > 0, l2_normalize(sums), 0.0)
 
     # ---- job 3: final assignment pass
-    map_combine, kinds = _assign_stats_map(k, impl)
-    job3 = make_job(mesh, axes, map_combine, kinds, name="bkc_final_assign")
-    out = job3({"x": x, "w": w}, {"centers": centers})
+    if bounded:
+        map_combine, kinds = _assign_stats_bounded_map(
+            k, impl, use_index=use_index
+        )
+        job3 = make_job(mesh, axes, map_combine, kinds, name="bkc_final_assign")
+        b = ops.bounds_identity(x.shape[0])
+        index = ops.build_center_index(centers) if use_index else None
+        out = job3(
+            {"x": x, "w": w, "bidx": b.idx, "blo": b.lo, "bhi": b.hi},
+            _bounds_bcast(centers, None, index),
+        )
+    else:
+        map_combine, kinds = _assign_stats_map(k, impl)
+        job3 = make_job(mesh, axes, map_combine, kinds, name="bkc_final_assign")
+        out = job3({"x": x, "w": w}, {"centers": centers})
     return DistClusterResult(
         centers=centers,
         assignment=out["idx"],
@@ -373,35 +594,69 @@ def bkc_distributed_stream(
     impl: str = "xla",
     checkpoint=None,
     guard=None,
+    bounded: bool | None = None,
 ) -> DistClusterResult:
     """Out-of-core distributed BKC: jobs 1 and 3 are streaming fold jobs
     (chunks sharded on arrival, one collective per pass); job 2 runs on the
     replicated O(BigK·d) micro-cluster statistics exactly as the resident
     path — only the two full passes over the collection ever touch chunks.
     Pass-1 stats persist as a pass result (ids ``bkc/mc``, ``bkc/final``) so
-    a restart killed in pass 3 never re-streams pass 1."""
+    a restart killed in pass 3 never re-streams pass 1. ``bounded`` routes
+    both passes through the bound-pruned op with sentinel bounds."""
     from repro.core.bkc import _group_centers
 
     check_stream_shardable(stream, mesh, axes)
+    bounded = ops.bounds_enabled(bounded)
+    use_index = bounded and ops._resolve(impl) != "xla"
 
     # ---- job 1: micro-cluster statistics folded over the chunk stream (ONE
     # fused kernel per shard per chunk, CF additivity as the chunk monoid)
     def mc_map(data, bcast):
-        st = ops.assign_stats(data["x"], bcast["centers"], data["w"], impl=impl)
+        if bounded:
+            index = (
+                ops.CenterIndex(bcast["perm"], bcast["group_of"])
+                if use_index else None
+            )
+            st = ops.assign_stats_bounded(
+                data["x"], bcast["centers"],
+                ops.Bounds(data["bidx"], data["blo"], data["bhi"]),
+                bcast["drift"], data["w"], index=index, impl=impl,
+            )
+        else:
+            st = ops.assign_stats(
+                data["x"], bcast["centers"], data["w"], impl=impl
+            )
         return {
             "n": st.counts,
             "cf1": st.sums,
             "cf2": st.sumsq,
             "min_sim": st.min_sim,
+            # sentinel bounds in, bounds out dropped: single-pass job — but
+            # the fold protocol still wants the shard kinds when bounded
+            **(
+                {"bidx": st.bounds.idx, "blo": st.bounds.lo,
+                 "bhi": st.bounds.hi, "idx": st.idx}
+                if bounded else {}
+            ),
         }
 
-    job1 = make_fold_job(
-        mesh,
-        axes,
-        mc_map,
-        {"n": "sum", "cf1": "sum", "cf2": "sum", "min_sim": "min"},
-        name="bkc_mc_fold",
-    )
+    mc_kinds = {"n": "sum", "cf1": "sum", "cf2": "sum", "min_sim": "min"}
+    if bounded:
+        mc_kinds.update(
+            {"bidx": "shard", "blo": "shard", "bhi": "shard", "idx": "shard"}
+        )
+    job1 = make_fold_job(mesh, axes, mc_map, mc_kinds, name="bkc_mc_fold")
+
+    def bkwargs(centers):
+        if not bounded:
+            return {}
+        return {
+            "bounded": True,
+            "bounds_blocks": None,  # sentinel: no prior pass to carry from
+            "drift": None,
+            "index": ops.build_center_index(centers) if use_index else None,
+        }
+
     stats = None
     if checkpoint is not None:
         from repro.resilience import array_token
@@ -409,11 +664,15 @@ def bkc_distributed_stream(
         mc_meta = {"centers": array_token(init_centers)}
         stats = checkpoint.load_result("bkc/mc", meta=mc_meta)
     if stats is None:
-        stats, _ = _fold_pass(
+        stats, _, _ = _fold_pass(
             job1, mesh, axes, stream, init_centers, collect=False,
             pass_id="bkc/mc", checkpoint=checkpoint, guard=guard,
+            **bkwargs(init_centers),
         )
         if checkpoint is not None:
+            stats = {
+                k_: v for k_, v in stats.items() if v is not None
+            }  # drop 'shard' placeholders before persisting
             checkpoint.save_result("bkc/mc", dict(stats), meta=mc_meta)
 
     valid = stats["n"] > 0
@@ -428,11 +687,17 @@ def bkc_distributed_stream(
     centers, _group, _thr = _group_centers(mc, k)
 
     # ---- job 3: final assignment pass (streamed)
-    map_combine, kinds = _assign_stats_map(k, impl)
+    if bounded:
+        map_combine, kinds = _assign_stats_bounded_map(
+            k, impl, use_index=use_index
+        )
+    else:
+        map_combine, kinds = _assign_stats_map(k, impl)
     job3 = make_fold_job(mesh, axes, map_combine, kinds, name="bkc_final_fold")
-    out, idx = _fold_pass(
+    out, idx, _ = _fold_pass(
         job3, mesh, axes, stream, centers, collect=True,
         pass_id="bkc/final", checkpoint=checkpoint, guard=guard,
+        **bkwargs(centers),
     )
     if checkpoint is not None:
         checkpoint.delete_result("bkc/mc")  # the run is over
@@ -547,6 +812,7 @@ def buckshot_distributed(
     impl: str = "xla",
     hac: str = "replicated",
     sample_rows: jax.Array | None = None,
+    bounded: bool | None = None,
 ) -> DistClusterResult:
     """Buckshot: distributed sample -> single-link HAC -> 2-3 distributed
     K-Means iterations (phase-1 flavors: see ``_phase1_init_centers``).
@@ -568,6 +834,7 @@ def buckshot_distributed(
         max_iters=kmeans_iters,
         tol=0.0,
         impl=impl,
+        bounded=bounded,
     )
     return res
 
@@ -694,6 +961,7 @@ def buckshot_distributed_stream(
     sample_rows: jax.Array | None = None,
     checkpoint=None,
     guard=None,
+    bounded: bool | None = None,
 ) -> DistClusterResult:
     """Out-of-core distributed Buckshot — the last algorithm of the
     out-of-core distributed matrix.
@@ -727,6 +995,7 @@ def buckshot_distributed_stream(
         impl=impl,
         checkpoint=checkpoint.scoped("buckshot") if checkpoint is not None else None,
         guard=guard,
+        bounded=bounded,
     )
     if checkpoint is not None:
         checkpoint.delete_result("reservoir")  # the run is over

@@ -55,8 +55,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 # Shared with the standalone assign kernel: same tiling, same tie semantics.
+from repro.kernels import ref
 from repro.kernels.assign_argmax import BK, BN, NEG, _pad_to
-from repro.kernels.ref import BIG
+from repro.kernels.ref import BIG, BIG_I, PRUNE_MARGIN
 
 BD = 512  # feature columns per label_stats accumulator tile
 # VMEM cap for the fused kernel's resident (kp, d) f32 sums accumulator; the
@@ -228,6 +229,314 @@ def assign_stats_pallas(
         counts[:k, 0],
         min_sim[:k, 0],
         sumsq[:k, 0],
+    )
+
+
+# ------------------------------------------------------- bounded (pruned)
+#
+# Bound-pruned variant of the fused kernel (DESIGN.md §13). Two pruning
+# levels, both exact:
+#
+#   * Row level (Elkan/Hamerly): rows whose deflated carry proves the winner
+#     unchanged arrive PRE-ASSIGNED (act = 0, idx/sim initialized from the
+#     carry); their similarity lanes are masked to NEG so they never update.
+#     When EVERY row of an n-block is settled, whole center slabs are skipped
+#     via @pl.when — this is where the O(n·k·d) actually disappears.
+#   * Slab level (two-level index): centers arrive PERMUTED so that similar
+#     centers (ops.build_center_index's √k Lloyd groups) share a BK slab.
+#     Each slab carries a cone bound: with r its unit representative,
+#     s = x·r and t = √(‖x‖² − s²), every member c (decomposed c = a·r + c⊥)
+#     satisfies x·c = a·s + x·c⊥ ≤ max(a⁺s, a⁻s) + b·t, where a⁺/a⁻ are the
+#     max/min member component along r and b the max ‖c⊥‖. A slab whose ub
+#     is below every active row's running best (minus the f32 margin) cannot
+#     hold a winner OR a tie, so it is skipped — computing only the (BN, d)
+#     × (d, 1) rep dot instead of the (BN, d) × (d, BK) slab matmul.
+#
+# Exactness bookkeeping: labels are original center ids (the perm rides in
+# as an int32 column and updates are (sim desc, orig id asc) lexicographic,
+# reproducing the flat sweep's ties-to-lowest-index bit-for-bit). The hi
+# bound out is max(tracked second-best among computed slabs, ub of skipped
+# slabs) — a valid upper bound on every non-winner similarity.
+
+
+def _bounded_kernel(
+    x_ref,
+    c_ref,
+    w_ref,
+    act_ref,
+    rsq_ref,
+    idx0_ref,
+    sim0_ref,
+    perm_ref,
+    rep_ref,
+    ap_ref,
+    an_ref,
+    bm_ref,
+    idx_ref,
+    sim_ref,
+    sec_ref,
+    sums_ref,
+    counts_ref,
+    min_ref,
+    sq_ref,
+    *,
+    ns: int,
+    margin: float,
+):
+    i = pl.program_id(0)  # n tile
+    j = pl.program_id(1)  # center SLAB (innermost)
+
+    @pl.when(j == 0)
+    def _init_rows():
+        # pruned rows start at their carried (idx, sim) and are final;
+        # active rows start unassigned (-1, NEG)
+        idx_ref[...] = idx0_ref[...]
+        sim_ref[...] = sim0_ref[...]
+        sec_ref[...] = jnp.full_like(sec_ref, NEG)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _init_accumulators():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        min_ref[...] = jnp.full_like(min_ref, BIG)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    x = x_ref[...]  # (BN, d)
+    act = act_ref[...] > 0  # (BN, 1) row still needs the sweep
+    rsq = rsq_ref[...]  # (BN, 1) ‖x‖²
+    rep = rep_ref[...]  # (1, d) slab representative (unit or zero)
+    s = jax.lax.dot_general(
+        x, rep, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (BN, 1)
+    t = jnp.sqrt(jnp.maximum(rsq - s * s, 0.0))
+    ub = (
+        jnp.maximum(ap_ref[0, 0] * s, an_ref[0, 0] * s) + bm_ref[0, 0] * t
+    )  # (BN, 1) cone bound on any member similarity
+
+    cur = sim_ref[...]  # running best only grows, so the skip test is safe
+    need = jnp.any(jnp.logical_and(act, ub >= cur - margin))
+
+    @pl.when(need)
+    def _sweep():
+        c = c_ref[...]  # (BK, d) permuted centers
+        sims = jax.lax.dot_general(
+            x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (BN, BK)
+        orig = perm_ref[...][:, 0][None, :]  # (1, BK) original ids; -1 = pad
+        valid = jnp.logical_and(orig >= 0, act)
+        sims = jnp.where(valid, sims, NEG)
+        lmax = jnp.max(sims, axis=1, keepdims=True)
+        cand = sims == lmax
+        orig_b = jnp.broadcast_to(orig, sims.shape)
+        lorig = jnp.min(
+            jnp.where(cand, orig_b, BIG_I), axis=1, keepdims=True
+        )  # lowest ORIGINAL id among slab ties
+        winner = jnp.logical_and(cand, orig_b == lorig)
+        lsec = jnp.max(jnp.where(winner, NEG, sims), axis=1, keepdims=True)
+
+        has = lmax > NEG  # fully-masked rows (settled/pad) update nothing
+        best = sim_ref[...]
+        bidx = idx_ref[...]
+        better = jnp.logical_and(
+            has,
+            jnp.logical_or(
+                lmax > best, jnp.logical_and(lmax == best, lorig < bidx)
+            ),
+        )
+        sim_ref[...] = jnp.where(better, lmax, best)
+        idx_ref[...] = jnp.where(better, lorig, bidx)
+        # top-2 value fold: second' = max(second, slab second, min(best, slab max))
+        sec_ref[...] = jnp.maximum(
+            jnp.maximum(sec_ref[...], jnp.where(has, lsec, NEG)),
+            jnp.minimum(best, jnp.where(has, lmax, NEG)),
+        )
+
+    @pl.when(jnp.logical_not(need))
+    def _skip():
+        # the slab was not searched: its cone bound caps every member, and it
+        # cannot hold the winner (ub < running best), so it belongs in hi
+        sec_ref[...] = jnp.maximum(sec_ref[...], jnp.where(act, ub, NEG))
+
+    @pl.when(j == ns - 1)
+    def _combine():
+        idx = idx_ref[...]  # (BN, 1) final assignment (original ids; -1 pad)
+        sim = sim_ref[...]
+        wv = w_ref[...]
+        kp = sums_ref.shape[0]
+        bn_ = idx.shape[0]
+
+        bins = jax.lax.broadcasted_iota(jnp.int32, (kp, bn_), 0)
+        hot = bins == idx[:, 0][None, :]  # idx -1 matches no bin
+        wrow = wv[:, 0][None, :]
+        hot_w = jnp.where(hot, wrow, 0.0).astype(jnp.float32)
+
+        xf = x.astype(jnp.float32)
+        sums_ref[...] += jax.lax.dot_general(
+            hot_w,
+            xf[:, : sums_ref.shape[1]],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        counts_ref[...] += jnp.sum(hot_w, axis=1, keepdims=True)
+        rowsq = jnp.sum(xf * xf, axis=1)
+        sq_ref[...] += jnp.sum(hot_w * rowsq[None, :], axis=1, keepdims=True)
+        member = jnp.where(
+            jnp.logical_and(hot, wrow > 0), sim[:, 0][None, :], BIG
+        )
+        min_ref[...] = jnp.minimum(
+            min_ref[...], jnp.min(member, axis=1, keepdims=True)
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("interpret", "bn", "bk", "bd", "margin")
+)
+def assign_stats_bounded_pallas(
+    x: jax.Array,
+    centers: jax.Array,
+    prev_idx: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    drift: jax.Array,
+    w: jax.Array | None = None,
+    *,
+    perm: jax.Array | None = None,
+    margin: float = PRUNE_MARGIN,
+    interpret: bool = False,
+    bn: int = BN,
+    bk: int = BK,
+    bd: int | None = None,
+):
+    """Bound-pruned fused pass; contract identical to ref.assign_stats_bounded.
+
+    ``perm`` is a (k,) slab-ordering permutation (ops.build_center_index);
+    None falls back to the identity order (cone bounds still skip slabs, just
+    less often). Returns the 10-tuple (idx, best_sim, sums, counts, min_sim,
+    sumsq, idx, lo_out, hi_out, pruned) with labels in ORIGINAL center ids.
+    """
+    n, d = x.shape
+    k = centers.shape[0]
+    bn = min(bn, max(8, n))
+    bk = min(bk, max(8, k))
+    dmult = 128 if d >= 128 else 8
+
+    if perm is None:
+        perm = jnp.arange(k, dtype=jnp.int32)
+    cperm = centers[perm]
+    xp = _pad_to(_pad_to(x, 0, bn), 1, dmult)
+    cp = _pad_to(_pad_to(cperm, 0, bk), 1, dmult)
+    permp = _pad_to(perm.astype(jnp.int32)[:, None] + 1, 0, bk) - 1  # pad -> -1
+    wv = jnp.ones((n,), jnp.float32) if w is None else w.astype(jnp.float32)
+    wp = _pad_to(wv[:, None], 0, bn)
+    np_, dp = xp.shape
+    kp_c = cp.shape[0]
+    ns = kp_c // bk  # number of center slabs
+    kp = k + ((-k) % 8)
+    grid = (np_ // bn, ns)
+
+    # ---- row-level bound prep (XLA side: O(n·d), dwarfed by the sweep)
+    xf = x.astype(jnp.float32)
+    rowsq = jnp.einsum("nd,nd->n", xf, xf)
+    rownorm = jnp.sqrt(rowsq)
+    ok, pidx, lo_adj, hi_adj = ref.deflate_bounds(
+        prev_idx, lo, hi, rownorm, drift
+    )
+    pruned = jnp.logical_and(ok, lo_adj > hi_adj + margin)
+    sim_prev = jnp.einsum(
+        "nd,nd->n", xf, centers[pidx].astype(jnp.float32)
+    )  # settled rows' final similarity, without the k sweep
+    act = jnp.where(pruned, 0.0, 1.0).astype(jnp.float32)
+    idx0 = jnp.where(pruned, pidx, -1).astype(jnp.int32)
+    sim0 = jnp.where(pruned, sim_prev, NEG).astype(jnp.float32)
+    actp = _pad_to(act[:, None], 0, bn)  # pad rows act=0: never force a sweep
+    rsqp = _pad_to(rowsq[:, None], 0, bn)
+    idx0p = _pad_to(idx0[:, None] + 1, 0, bn) - 1  # pad -> -1 (no stats bin)
+    sim0p = _pad_to(sim0[:, None], 0, bn)
+
+    # ---- slab cone bounds (XLA side: O(k·d))
+    c3 = cp.reshape(ns, bk, dp).astype(jnp.float32)
+    m3 = permp.reshape(ns, bk) >= 0
+    cnt = jnp.sum(m3, axis=1).astype(jnp.float32)  # (ns,)
+    mean = jnp.sum(c3 * m3[..., None], axis=1) / jnp.maximum(cnt, 1.0)[:, None]
+    mnorm = jnp.sqrt(jnp.sum(mean * mean, axis=1, keepdims=True))
+    rep = mean / jnp.maximum(mnorm, 1e-12)  # (ns, dp); empty slab -> 0
+    a = jnp.einsum("sbd,sd->sb", c3, rep)
+    csq = jnp.sum(c3 * c3, axis=2)
+    bperp = jnp.sqrt(jnp.maximum(csq - a * a, 0.0))
+    nonempty = cnt > 0
+    a_pos = jnp.where(
+        nonempty, jnp.max(jnp.where(m3, a, NEG), axis=1), 0.0
+    )[:, None]
+    a_neg = jnp.where(
+        nonempty, jnp.min(jnp.where(m3, a, BIG), axis=1), 0.0
+    )[:, None]
+    b_max = jnp.where(
+        nonempty, jnp.max(jnp.where(m3, bperp, 0.0), axis=1), 0.0
+    )[:, None]
+
+    if bd is None:
+        bd = ACC_BUDGET // (kp * 4)
+    bd_sums = min(dp, max(dmult, (bd // dmult) * dmult))
+
+    idx, sim, sec, sums, counts, min_sim, sumsq = pl.pallas_call(
+        functools.partial(_bounded_kernel, ns=ns, margin=margin),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, dp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, dp), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, dp), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp, bd_sums), lambda i, j: (0, 0)),
+            pl.BlockSpec((kp, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((kp, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((kp, 1), lambda i, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, 1), jnp.int32),
+            jax.ShapeDtypeStruct((np_, 1), jnp.float32),
+            jax.ShapeDtypeStruct((np_, 1), jnp.float32),
+            jax.ShapeDtypeStruct((kp, bd_sums), jnp.float32),
+            jax.ShapeDtypeStruct((kp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((kp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((kp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, cp, wp, actp, rsqp, idx0p, sim0p, permp, rep, a_pos, a_neg, b_max)
+    idx_n = idx[:n, 0]
+    sim_n = sim[:n, 0]
+    if bd_sums < d:
+        tail, _ = label_stats_pallas(
+            x[:, bd_sums:], idx_n, k, wv, interpret=interpret, bn=bn
+        )
+        full_sums = jnp.concatenate([sums[:k, :bd_sums], tail], axis=1)
+    else:
+        full_sums = sums[:k, :d]
+    lo_out = sim_n
+    hi_out = jnp.where(pruned, hi_adj, sec[:n, 0])
+    return (
+        idx_n,
+        sim_n,
+        full_sums,
+        counts[:k, 0],
+        min_sim[:k, 0],
+        sumsq[:k, 0],
+        idx_n,
+        lo_out,
+        hi_out,
+        pruned,
     )
 
 

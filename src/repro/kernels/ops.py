@@ -13,6 +13,7 @@ Core code imports ONLY from this module, never from the kernels directly.
 from __future__ import annotations
 
 import functools
+import os
 import warnings
 from typing import Callable, NamedTuple
 
@@ -218,6 +219,239 @@ def assign_stats_chunked(
         counts=counts,
         min_sim=min_sim,
         sumsq=sumsq,
+    )
+
+
+# ---------------------------------------------------------------- bounded
+
+
+def bounds_enabled(flag: bool | None = None) -> bool:
+    """Resolve the bound-pruned assignment default: an explicit flag wins;
+    otherwise REPRO_ASSIGN_BOUNDS=1 turns it on process-wide (CI runs the
+    fault-injection matrix once under it)."""
+    if flag is not None:
+        return bool(flag)
+    return os.environ.get("REPRO_ASSIGN_BOUNDS", "") == "1"
+
+
+class Bounds(NamedTuple):
+    """Per-row Elkan/Hamerly carry for bound-pruned assignment.
+
+    Lives in the streaming fold carry (host blocks between passes, device
+    arrays inside one) — never as global (n, k) state. ``idx == -1`` marks
+    the unknown sentinel (first pass, post-reseed invalidation, or a
+    checkpoint-skipped iteration); sentinel rows always take the full sweep,
+    so the bounds state is a pure performance hint.
+    """
+
+    idx: jax.Array  # (n,) int32 prior assignment; -1 = unknown
+    lo: jax.Array  # (n,) f32 lower bound on sim(x, c_idx)
+    hi: jax.Array  # (n,) f32 upper bound on sim(x, any OTHER center)
+
+
+def bounds_identity(n: int) -> Bounds:
+    """The unknown-sentinel Bounds every bounded pass can start from."""
+    return Bounds(
+        jnp.full((n,), -1, jnp.int32),
+        jnp.full((n,), -ref.BIG, jnp.float32),
+        jnp.full((n,), ref.BIG, jnp.float32),
+    )
+
+
+def bounds_invalidate(b: Bounds, rows: jax.Array) -> Bounds:
+    """Force the unknown sentinel on a (n,) bool row mask (reseed guard)."""
+    return Bounds(
+        jnp.where(rows, -1, b.idx).astype(jnp.int32),
+        jnp.where(rows, -ref.BIG, b.lo),
+        jnp.where(rows, ref.BIG, b.hi),
+    )
+
+
+class CenterIndex(NamedTuple):
+    """Two-level center index: a clustered ORDER over the centers.
+
+    ``perm[slot] = original center id``: centers are permuted so that
+    similar centers (same √k Lloyd group) sit in the same kernel slab; the
+    Pallas path then bounds whole slabs with a cone bound and skips the ones
+    that provably cannot hold the winner (see assign_stats.py). The index
+    changes only the visit order — labels stay in ORIGINAL center ids and
+    bit-identical to the flat sweep.
+    """
+
+    perm: jax.Array  # (k,) int32 original center id per slab-ordered slot
+    group_of: jax.Array  # (k,) int32 Lloyd group of each original center
+
+
+@functools.partial(jax.jit, static_argnames=("groups", "iters", "impl"))
+def build_center_index(
+    centers: jax.Array,
+    *,
+    groups: int | None = None,
+    iters: int = 2,
+    impl: str = "xla",
+) -> CenterIndex:
+    """Cluster the k centers into ~√k groups (mini-Lloyd over ``label_stats``)
+    and emit the slab-ordered permutation. Deterministic: representatives
+    start as a fixed stride of the centers (no RNG), ties break to the lowest
+    index everywhere. Cost is O(k·g·d·iters) — noise next to one n·k·d
+    assignment pass — so callers rebuild it after every center update.
+    """
+    k = centers.shape[0]
+    g = groups if groups is not None else max(1, int(round(k ** 0.5)))
+    arange_k = jnp.arange(k, dtype=jnp.int32)
+    if g >= k:
+        return CenterIndex(arange_k, arange_k)
+    stride = -(-k // g)  # ceil
+    reps = centers[::stride]
+    g = reps.shape[0]
+    cf = centers.astype(jnp.float32)
+    for _ in range(iters):
+        gidx, _ = ref.assign_argmax(cf, reps)
+        sums, cnts = label_stats(cf, gidx, g, impl=impl)
+        norm = jnp.sqrt(jnp.sum(sums * sums, axis=1, keepdims=True))
+        reps = jnp.where(cnts[:, None] > 0, sums / jnp.maximum(norm, 1e-12), reps)
+    gidx, _ = ref.assign_argmax(cf, reps)
+    # stable (group, original id) order; values unique so argsort is exact
+    perm = jnp.argsort(gidx * k + arange_k).astype(jnp.int32)
+    return CenterIndex(perm, gidx.astype(jnp.int32))
+
+
+class AssignStatsBounded(NamedTuple):
+    """AssignStats + the refreshed bounds carry + the analytic prune mask."""
+
+    idx: jax.Array  # (n,) int32 nearest-center assignment (original ids)
+    best_sim: jax.Array  # (n,) f32 best similarity
+    sums: jax.Array  # (k, d) f32 weighted per-cluster sums (CF1)
+    counts: jax.Array  # (k,) f32 per-cluster weight totals
+    min_sim: jax.Array  # (k,) f32 lowest member similarity (ref.BIG if empty)
+    sumsq: jax.Array  # (k,) f32 weighted sum of squared row norms (CF2)
+    bounds: Bounds  # refreshed carry, valid against THESE centers
+    pruned: jax.Array  # (n,) bool — row skipped the full center sweep
+
+
+def _pack_bounded(raw) -> AssignStatsBounded:
+    idx, sim, sums, counts, min_sim, sumsq, bidx, lo, hi, pruned = raw
+    return AssignStatsBounded(
+        idx, sim, sums, counts, min_sim, sumsq, Bounds(bidx, lo, hi), pruned
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "margin"))
+def assign_stats_bounded(
+    x: jax.Array,
+    centers: jax.Array,
+    bounds: Bounds,
+    drift: jax.Array,
+    w: jax.Array | None = None,
+    *,
+    index: CenterIndex | None = None,
+    impl: str = "auto",
+    margin: float = ref.PRUNE_MARGIN,
+) -> AssignStatsBounded:
+    """Bound-pruned fused map+combine: ``assign_stats`` with an Elkan/Hamerly
+    carry that lets provably-settled rows skip the k-sweep.
+
+    Labels are bit-identical to the brute-force oracle on every row and for
+    ANY bounds state (sentinel included) — pruning fires only when the
+    deflated bounds prove the winner unchanged. The XLA path still computes
+    the full sweep (static shapes; it pays only bookkeeping) — real compute
+    skipping is the Pallas path's block-level ``@pl.when``, optionally
+    steered by a two-level ``CenterIndex``.
+    """
+    impl = _resolve(impl)
+
+    def xla():
+        return _pack_bounded(
+            ref.assign_stats_bounded_scatter(
+                x, centers, bounds.idx, bounds.lo, bounds.hi, drift, w,
+                margin=margin,
+            )
+        )
+
+    if impl == "xla":
+        return xla()
+
+    def pallas():
+        from repro.kernels import assign_stats as kmod
+
+        return _pack_bounded(
+            kmod.assign_stats_bounded_pallas(
+                x, centers, bounds.idx, bounds.lo, bounds.hi, drift, w,
+                perm=None if index is None else index.perm,
+                margin=margin,
+                interpret=impl == "pallas_interpret",
+            )
+        )
+
+    return _pallas_guard("assign_stats_bounded", pallas, xla)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl", "margin"))
+def assign_stats_bounded_chunked(
+    x: jax.Array,
+    centers: jax.Array,
+    bounds: Bounds,
+    drift: jax.Array,
+    w: jax.Array | None = None,
+    *,
+    chunk: int = 65_536,
+    index: CenterIndex | None = None,
+    impl: str = "auto",
+    margin: float = ref.PRUNE_MARGIN,
+) -> AssignStatsBounded:
+    """Streaming bounded pass: scan over row blocks, bounds sliced per block.
+
+    Chunking is bit-transparent for labels and bounds (every row's sweep is
+    independent); the stats fold through the same monoid as
+    ``assign_stats_chunked``. Rows padded to a chunk multiple carry weight 0
+    and the unknown-bounds sentinel.
+    """
+    n, d = x.shape
+    k = centers.shape[0]
+    if n <= chunk:
+        return assign_stats_bounded(
+            x, centers, bounds, drift, w, index=index, impl=impl, margin=margin
+        )
+
+    wv = jnp.ones((n,), jnp.float32) if w is None else w.astype(jnp.float32)
+    ident = bounds_identity((-n) % chunk)
+    pad = (-n) % chunk
+    bi, bl, bh = bounds
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, d), x.dtype)])
+        wv = jnp.concatenate([wv, jnp.zeros((pad,), jnp.float32)])
+        bi = jnp.concatenate([bi, ident.idx])
+        bl = jnp.concatenate([bl, ident.lo])
+        bh = jnp.concatenate([bh, ident.hi])
+    blocks = {
+        "x": x.reshape(-1, chunk, d),
+        "w": wv.reshape(-1, chunk),
+        "bi": bi.reshape(-1, chunk),
+        "bl": bl.reshape(-1, chunk),
+        "bh": bh.reshape(-1, chunk),
+    }
+
+    def body(carry, blk):
+        st = assign_stats_bounded(
+            blk["x"], centers, Bounds(blk["bi"], blk["bl"], blk["bh"]),
+            drift, blk["w"], index=index, impl=impl, margin=margin,
+        )
+        out = (st.idx, st.best_sim, st.bounds.lo, st.bounds.hi, st.pruned)
+        return merge_stats(carry, st), out
+
+    (sums, counts, min_sim, sumsq), (idxs, sims, los, his, prs) = jax.lax.scan(
+        body, stats_identity(k, d), blocks
+    )
+    idx = idxs.reshape(-1)[:n]
+    return AssignStatsBounded(
+        idx=idx,
+        best_sim=sims.reshape(-1)[:n],
+        sums=sums,
+        counts=counts,
+        min_sim=min_sim,
+        sumsq=sumsq,
+        bounds=Bounds(idx, los.reshape(-1)[:n], his.reshape(-1)[:n]),
+        pruned=prs.reshape(-1)[:n],
     )
 
 

@@ -21,6 +21,15 @@ BIG = float(jnp.finfo(jnp.float32).max)
 # shards (jax.lax.pmin) the way BIG is for similarities.
 BIG_I = int(jnp.iinfo(jnp.int32).max)
 
+# Safety margin for bound-based pruning (assign_stats_bounded): a row skips
+# the center sweep only when its deflated lower bound BEATS its deflated upper
+# bound by more than this. Real-arithmetic Elkan/Hamerly pruning is exact; the
+# margin absorbs f32 rounding of the dots and the drift norms (worst case
+# ~d·ulp ≈ 1e-4 relative at d=2048) so pruned labels stay bit-identical to
+# the brute-force argmax, ties included (an exact tie has lo == hi, which the
+# strict margin never prunes).
+PRUNE_MARGIN = 1e-4
+
 
 def assign_argmax(x: jax.Array, centers: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Nearest-center assignment by dot-product similarity.
@@ -136,6 +145,190 @@ def assign_stats_scatter(
     min_sim = jax.ops.segment_min(sim_m, idx, num_segments=k)
     min_sim = jnp.where(counts > 0, min_sim, BIG)
     return idx, best_sim, sums, counts, min_sim, sumsq
+
+
+def deflate_bounds(
+    prev_idx: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    rownorm: jax.Array,
+    drift: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Deflate carried similarity bounds by per-center drift (Cauchy-Schwarz).
+
+    Bounds semantics (cosine/max-dot assignment — the mirror image of the
+    classical distance-space Elkan bounds):
+      lo: lower bound on sim(x, c_{prev_idx}) under the CURRENT centers.
+      hi: upper bound on max_{j != prev_idx} sim(x, c_j).
+    Both were exact similarities under the centers of the pass that produced
+    them; |sim(x, c') - sim(x, c)| <= ‖x‖·‖c' - c‖ deflates them to the
+    current centers:
+      lo' = lo - ‖x‖·drift[prev_idx]
+      hi' = hi + ‖x‖·max_{j != prev_idx} drift[j]
+
+    Args:
+      prev_idx: (n,) int32 prior assignment; negative/oob = unknown sentinel.
+      lo, hi: (n,) f32 carried bounds (sentinel rows carry -BIG / +BIG).
+      rownorm: (n,) f32 row L2 norms.
+      drift: (k,) f32 per-center movement ‖c_new - c_old‖.
+
+    Returns:
+      ok: (n,) bool — prev_idx is a real assignment.
+      pidx: (n,) int32 prev_idx clipped into [0, k).
+      lo_adj, hi_adj: (n,) f32 deflated bounds (garbage where ~ok).
+    """
+    k = drift.shape[0]
+    ok = jnp.logical_and(prev_idx >= 0, prev_idx < k)
+    pidx = jnp.clip(prev_idx, 0, k - 1).astype(jnp.int32)
+    argd = jnp.argmax(drift)
+    maxd = jnp.max(drift)
+    # largest drift among centers OTHER than the row's own (top-2 trick)
+    sec = jnp.maximum(
+        jnp.max(jnp.where(jnp.arange(k) == argd, -1.0, drift)), 0.0
+    )
+    d_other = jnp.where(pidx == argd, sec, maxd)
+    lo_adj = lo - rownorm * drift[pidx]
+    hi_adj = hi + rownorm * d_other
+    return ok, pidx, lo_adj, hi_adj
+
+
+def _bounded_assign(
+    x: jax.Array,
+    centers: jax.Array,
+    prev_idx: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    drift: jax.Array,
+    margin: float,
+):
+    """Shared assignment half of the bounded oracle/scatter paths.
+
+    Returns (idx, best_sim, lo_out, hi_out, pruned, rowsq) — the full (n, k)
+    sweep IS computed (XLA's static shapes leave no data-dependent savings;
+    real compute skipping lives in the Pallas path), but pruned rows take
+    their carried index so pruning bugs surface in label-parity tests.
+    """
+    k = centers.shape[0]
+    neg = jnp.finfo(jnp.float32).min
+    xf = x.astype(jnp.float32)
+    rowsq = jnp.einsum("nd,nd->n", xf, xf)
+    rownorm = jnp.sqrt(rowsq)
+    ok, pidx, lo_adj, hi_adj = deflate_bounds(prev_idx, lo, hi, rownorm, drift)
+    pruned = jnp.logical_and(ok, lo_adj > hi_adj + margin)
+
+    sims = jnp.einsum(
+        "nd,kd->nk", x, centers, preferred_element_type=jnp.float32
+    )
+    brute_idx = jnp.argmax(sims, axis=1).astype(jnp.int32)
+    brute_best = jnp.max(sims, axis=1).astype(jnp.float32)
+    # second-best VALUE (duplicates count separately): mask one instance of
+    # the winner column, take the max of the rest
+    masked = jnp.where(
+        jnp.arange(k)[None, :] == brute_idx[:, None], neg, sims
+    )
+    second = jnp.max(masked, axis=1).astype(jnp.float32)
+
+    idx = jnp.where(pruned, pidx, brute_idx)
+    best_sim = jnp.where(
+        pruned, jnp.take_along_axis(sims, pidx[:, None], axis=1)[:, 0],
+        brute_best,
+    )
+    # refreshed bounds, valid against THESE centers: lo is the exact winner
+    # similarity; hi is the exact second-best where the sweep ran, and the
+    # deflated carry (still a valid upper bound) where it was pruned.
+    lo_out = best_sim
+    hi_out = jnp.where(pruned, hi_adj, second)
+    return idx, best_sim, lo_out, hi_out, pruned, rowsq
+
+
+def assign_stats_bounded(
+    x: jax.Array,
+    centers: jax.Array,
+    prev_idx: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    drift: jax.Array,
+    w: jax.Array | None = None,
+    *,
+    margin: float = PRUNE_MARGIN,
+):
+    """Bound-pruned fused oracle: ``assign_stats`` + Elkan/Hamerly carry.
+
+    Semantic ground truth for ``assign_stats_bounded_pallas``. Labels are
+    bit-identical to ``assign_stats`` on every row: pruning only fires when
+    the deflated bounds PROVE the winner unchanged (see ``deflate_bounds``;
+    the margin covers f32 rounding), so the bounds state is a pure
+    performance hint — stats and labels never depend on it.
+
+    Args (beyond ``assign_stats``):
+      prev_idx, lo, hi: (n,) carried bounds from the previous pass against
+        the previous centers (-1 / -BIG / +BIG = unknown sentinel).
+      drift: (k,) f32 per-center movement since that pass.
+      margin: f32 safety margin; rows prune only when lo' > hi' + margin.
+
+    Returns:
+      (idx, best_sim, sums, counts, min_sim, sumsq, idx, lo_out, hi_out,
+       pruned) — the first six exactly as ``assign_stats``; the refreshed
+      bounds (idx, lo_out, hi_out) are valid against ``centers``; pruned is
+      the (n,) bool row mask that skipped the sweep.
+    """
+    k = centers.shape[0]
+    idx, best_sim, lo_out, hi_out, pruned, rowsq = _bounded_assign(
+        x, centers, prev_idx, lo, hi, drift, margin
+    )
+    one_hot = jax.nn.one_hot(idx, k, dtype=jnp.float32)  # (n, k)
+    if w is not None:
+        one_hot = one_hot * w.astype(jnp.float32)[:, None]
+    sums = jnp.einsum("nk,nd->kd", one_hot, x, preferred_element_type=jnp.float32)
+    counts = jnp.sum(one_hot, axis=0)
+    sumsq = jnp.einsum("nk,n->k", one_hot, rowsq)
+    member = jnp.where(one_hot > 0, best_sim[:, None], BIG)  # (n, k)
+    min_sim = jnp.min(member, axis=0) if x.shape[0] else jnp.full((k,), BIG)
+    min_sim = jnp.where(counts > 0, min_sim, BIG)
+    return idx, best_sim, sums, counts, min_sim, sumsq, idx, lo_out, hi_out, pruned
+
+
+def assign_stats_bounded_scatter(
+    x: jax.Array,
+    centers: jax.Array,
+    prev_idx: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    drift: jax.Array,
+    w: jax.Array | None = None,
+    *,
+    margin: float = PRUNE_MARGIN,
+):
+    """Production XLA path for the bounded fused op: stats via scatter-add.
+
+    Same contract as ``assign_stats_bounded`` (labels and bounds identical
+    bit-for-bit — both use ``_bounded_assign``); the statistics use segment
+    reductions like ``assign_stats_scatter``. XLA cannot skip compute for
+    pruned rows (static shapes), so this path pays O(n·k + n·d) bookkeeping
+    on top of the brute sweep — the pruning payoff is Pallas-only.
+    """
+    k = centers.shape[0]
+    idx, best_sim, lo_out, hi_out, pruned, rowsq = _bounded_assign(
+        x, centers, prev_idx, lo, hi, drift, margin
+    )
+    xf = x.astype(jnp.float32)
+    if w is not None:
+        wf = w.astype(jnp.float32)
+        xf = xf * wf[:, None]
+        rsq = rowsq * wf
+        counts = jax.ops.segment_sum(wf, idx, num_segments=k)
+        sim_m = jnp.where(wf > 0, best_sim, BIG)
+    else:
+        counts = jax.ops.segment_sum(
+            jnp.ones_like(best_sim), idx, num_segments=k
+        )
+        rsq = rowsq
+        sim_m = best_sim
+    sums = jax.ops.segment_sum(xf, idx, num_segments=k)
+    sumsq = jax.ops.segment_sum(rsq, idx, num_segments=k)
+    min_sim = jax.ops.segment_min(sim_m, idx, num_segments=k)
+    min_sim = jnp.where(counts > 0, min_sim, BIG)
+    return idx, best_sim, sums, counts, min_sim, sumsq, idx, lo_out, hi_out, pruned
 
 
 def label_stats(

@@ -94,7 +94,13 @@ def carry_fingerprint(carry: Any) -> str:
             items = ",".join(f"{k}={sig(v)}" for k, v in sorted(obj.items()))
             return "{" + items + "}"
         if isinstance(obj, tuple):
-            return "(" + ",".join(sig(v) for v in obj) + ")"
+            # NamedTuples (Bounds, stats carries, ...) are tagged by class
+            # name: a carry layout change that swaps a plain tuple for a
+            # typed one (or one type for another of the same arity/shapes)
+            # must invalidate old snapshots, not silently restore into the
+            # wrong structure.
+            tag = type(obj).__name__ if hasattr(obj, "_fields") else ""
+            return tag + "(" + ",".join(sig(v) for v in obj) + ")"
         if isinstance(obj, list):
             return "[*]"
         return type(obj).__name__

@@ -1,0 +1,526 @@
+"""Bound-pruned assignment (DESIGN.md §13): triangle-inequality bounds in the
+fold carry + the two-level center index.
+
+The contract under test: bounds are a pure PERFORMANCE hint — labels, stats,
+and centers must be bit-identical to the brute-force sweep for ANY bounds
+state (sentinel, carried, stale-after-reseed), on every implementation
+(oracle, XLA scatter, Pallas interpret, chunked, resident, streaming,
+distributed), while pruning provably fires once centers settle.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: skip property-based tests only
+    from hypothesis_stub import given, settings, st
+
+from repro.common import l2_normalize
+from repro.kernels import ops, ref
+from repro.kernels.assign_stats import assign_stats_bounded_pallas
+
+ENV = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+ENV.pop("REPRO_ASSIGN_BOUNDS", None)
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _rand(rng, shape, dtype=jnp.float32):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32)).astype(dtype)
+
+
+def _blobs(rng, n, k, d, noise=0.3):
+    """Clustered data: drift settles fast, so carried bounds actually prune."""
+    c = rng.normal(size=(k, d)) * 3.0
+    lab = rng.integers(0, k, size=n)
+    x = c[lab] + noise * rng.normal(size=(n, d))
+    return l2_normalize(jnp.asarray(x.astype(np.float32)))
+
+
+def _update(centers, st_):
+    means = st_.sums / jnp.maximum(st_.counts, 1.0)[:, None]
+    return jnp.where(st_.counts[:, None] > 0, l2_normalize(means), centers)
+
+
+def _drift(new, old):
+    return jnp.sqrt(jnp.sum((new - old) ** 2, axis=1))
+
+
+# ------------------------------------------------------------ sentinel parity
+
+
+@pytest.mark.parametrize("n,k,d", [(7, 3, 5), (64, 16, 32), (300, 17, 70),
+                                   (513, 129, 130)])
+def test_bounded_sentinel_matches_assign_stats(rng, n, k, d):
+    """Sentinel bounds (first pass): every row sweeps, nothing prunes, and
+    all six stats equal the unbounded op bit-for-bit on every impl."""
+    x = _rand(rng, (n, d))
+    c = _rand(rng, (k, d))
+    want = ref.assign_stats(x, c)
+    b = ops.bounds_identity(n)
+    drift = jnp.zeros((k,), jnp.float32)
+    for impl in ("xla", "pallas_interpret"):
+        got = ops.assign_stats_bounded(x, c, b, drift, impl=impl)
+        assert not bool(np.asarray(got.pruned).any()), impl
+        np.testing.assert_array_equal(
+            np.asarray(want[0]), np.asarray(got.idx), err_msg=impl)
+        np.testing.assert_array_equal(
+            np.asarray(want[3]), np.asarray(got.counts), err_msg=impl)
+        np.testing.assert_allclose(
+            np.asarray(want[2]), np.asarray(got.sums),
+            rtol=2e-5, atol=2e-5, err_msg=impl)
+        # refreshed bounds: lo is the winner sim, hi the exact second-best
+        np.testing.assert_array_equal(
+            np.asarray(got.bounds.idx), np.asarray(got.idx), err_msg=impl)
+        np.testing.assert_allclose(
+            np.asarray(got.bounds.lo), np.asarray(got.best_sim),
+            rtol=1e-6, err_msg=impl)
+
+
+def test_bounded_iterated_labels_bit_identical(rng):
+    """The heart of the PR: carry bounds across Lloyd iterations and compare
+    labels against the brute sweep EVERY iteration on every implementation —
+    and pruning must actually fire once the centers settle."""
+    n, k, d = 600, 16, 48
+    x = _blobs(rng, n, k, d)
+    centers = x[:k]
+    b_or = b_sc = b_pl = b_ch = ops.bounds_identity(n)
+    drift = jnp.zeros((k,), jnp.float32)
+    total_pruned = 0
+    for it in range(8):
+        brute_idx = np.asarray(ref.assign_stats(x, centers)[0])
+        oracle = ops._pack_bounded(ref.assign_stats_bounded(
+            x, centers, b_or.idx, b_or.lo, b_or.hi, drift))
+        scatter = ops.assign_stats_bounded(x, centers, b_sc, drift, impl="xla")
+        pallas = ops.assign_stats_bounded(
+            x, centers, b_pl, drift, impl="pallas_interpret")
+        chunked = ops.assign_stats_bounded_chunked(
+            x, centers, b_ch, drift, chunk=250, impl="xla")  # 250 ∤ 600
+        for name, got in (("oracle", oracle), ("scatter", scatter),
+                          ("pallas", pallas), ("chunked", chunked)):
+            np.testing.assert_array_equal(
+                brute_idx, np.asarray(got.idx), err_msg=f"it{it}:{name}")
+        # all paths agree on WHAT survives pruning being exact; the pruned
+        # masks themselves may differ (pallas prunes whole slabs)
+        total_pruned += int(np.asarray(scatter.pruned).sum())
+        new_centers = _update(centers, scatter)
+        drift = _drift(new_centers, centers)
+        centers = new_centers
+        b_or, b_sc, b_pl, b_ch = (oracle.bounds, scatter.bounds,
+                                  pallas.bounds, chunked.bounds)
+    assert total_pruned > 0, "bounds never pruned a single row in 8 iters"
+
+
+def test_bounded_weighted_and_pad_rows(rng):
+    """Weight-0 rows (the streaming/distributed pad contract) contribute to
+    no statistic, bounded or not, sentinel or carried."""
+    n, k, d = 80, 7, 24
+    x = _rand(rng, (n, d))
+    c = _rand(rng, (k, d))
+    w = jnp.asarray((rng.random(n) > 0.3).astype(np.float32))
+    keep = np.asarray(w) > 0
+    want = ref.assign_stats(x[keep], c)
+    b = ops.bounds_identity(n)
+    drift = jnp.zeros((k,), jnp.float32)
+    for impl in ("xla", "pallas_interpret"):
+        got = ops.assign_stats_bounded(x, c, b, drift, w, impl=impl)
+        np.testing.assert_array_equal(
+            np.asarray(want[3]), np.asarray(got.counts), err_msg=impl)
+        np.testing.assert_allclose(
+            np.asarray(want[2]), np.asarray(got.sums),
+            rtol=1e-5, atol=1e-5, err_msg=impl)
+
+
+def test_bounded_integer_exact_bitforbit(rng):
+    """Integer-valued f32 data: every sum is exactly representable, so oracle,
+    scatter, and the Pallas kernel agree bit-for-bit on ALL ten outputs."""
+    n, k, d = 300, 17, 70
+    x = jnp.asarray(rng.integers(-8, 9, size=(n, d)).astype(np.float32))
+    c = jnp.asarray(rng.integers(-8, 9, size=(k, d)).astype(np.float32))
+    b = ops.bounds_identity(n)
+    drift = jnp.zeros((k,), jnp.float32)
+    want = ops._pack_bounded(
+        ref.assign_stats_bounded(x, c, b.idx, b.lo, b.hi, drift))
+    for impl in ("xla", "pallas_interpret"):
+        got = ops.assign_stats_bounded(x, c, b, drift, impl=impl)
+        for name in ("idx", "best_sim", "sums", "counts", "min_sim", "sumsq"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(want, name)),
+                np.asarray(getattr(got, name)),
+                err_msg=f"{impl}:{name}",
+            )
+
+
+def test_bounded_tie_breaks_lowest_index(rng):
+    """Duplicate best centers across k-tiles: lowest ORIGINAL index wins on
+    every path, exactly like assign_argmax — exact ties have lo == hi, so
+    tied rows can never prune into the wrong label."""
+    c = _rand(rng, (20, 16))
+    c = c.at[13].set(c[2])
+    x = c[2][None, :] * jnp.ones((5, 1))
+    b = ops.bounds_identity(5)
+    drift = jnp.zeros((20,), jnp.float32)
+    for impl in ("xla", "pallas_interpret"):
+        got = ops.assign_stats_bounded(x, c, b, drift, impl=impl)
+        assert (np.asarray(got.idx) == 2).all(), impl
+    # pallas with a forced small block size crosses a tile boundary
+    out = assign_stats_bounded_pallas(
+        x, c, b.idx, b.lo, b.hi, drift, interpret=True, bk=8)
+    assert (np.asarray(out[0]) == 2).all()
+
+
+def test_bounds_invalidate_forces_full_sweep(rng):
+    """bounds_invalidate rows carry the sentinel and always re-sweep, even
+    under zero drift where their old bounds would have pruned."""
+    n, k, d = 200, 8, 32
+    x = _blobs(rng, n, k, d)
+    c = l2_normalize(_rand(rng, (k, d)))
+    first = ops.assign_stats_bounded(
+        x, c, ops.bounds_identity(n), jnp.zeros((k,), jnp.float32))
+    again = ops.assign_stats_bounded(
+        x, c, first.bounds, jnp.zeros((k,), jnp.float32))
+    assert bool(np.asarray(again.pruned).any())  # zero drift: most rows prune
+    stale = jnp.asarray(np.arange(n) % 2 == 0)
+    inv = ops.bounds_invalidate(first.bounds, stale)
+    assert (np.asarray(inv.idx)[::2] == -1).all()
+    third = ops.assign_stats_bounded(
+        x, c, inv, jnp.zeros((k,), jnp.float32))
+    assert not bool(np.asarray(third.pruned)[::2].any())
+    np.testing.assert_array_equal(
+        np.asarray(third.idx), np.asarray(first.idx))
+
+
+# ------------------------------------------------------------ center index
+
+
+def test_center_index_perm_is_permutation(rng):
+    for k, d in ((5, 8), (16, 32), (100, 24), (257, 16)):
+        c = l2_normalize(_rand(rng, (k, d)))
+        idx = ops.build_center_index(c)
+        perm = np.sort(np.asarray(idx.perm))
+        np.testing.assert_array_equal(perm, np.arange(k))
+        g = np.asarray(idx.group_of)
+        assert g.min() >= 0 and g.max() < k
+        # deterministic: same centers, same index
+        idx2 = ops.build_center_index(c)
+        np.testing.assert_array_equal(np.asarray(idx.perm),
+                                      np.asarray(idx2.perm))
+
+
+def test_center_index_trivial_when_groups_exceed_k(rng):
+    c = l2_normalize(_rand(rng, (3, 8)))
+    idx = ops.build_center_index(c, groups=8)
+    np.testing.assert_array_equal(np.asarray(idx.perm), np.arange(3))
+
+
+def test_bounded_pallas_with_index_bit_identical(rng):
+    """The two-level index only reorders the slab visit order: labels stay
+    bit-identical to the brute sweep at large-ish k, across iterations with
+    real carried bounds — the exactness claim of the group-radius bound."""
+    n, k, d = 400, 64, 32
+    x = _blobs(rng, n, k, d)
+    centers = x[:k]
+    b = ops.bounds_identity(n)
+    drift = jnp.zeros((k,), jnp.float32)
+    for it in range(5):
+        brute_idx = np.asarray(ref.assign_stats(x, centers)[0])
+        index = ops.build_center_index(centers)
+        got = ops.assign_stats_bounded(
+            x, centers, b, drift, index=index, impl="pallas_interpret")
+        np.testing.assert_array_equal(
+            brute_idx, np.asarray(got.idx), err_msg=f"it{it}")
+        new_centers = _update(centers, got)
+        drift = _drift(new_centers, centers)
+        centers, b = new_centers, got.bounds
+
+
+# ------------------------------------------------------------ reseed guard
+
+
+def test_reseed_invalidates_donor_and_reseeded_rows(rng):
+    """kmeans_step_bounded(reseed='split'): rows assigned to the donor or
+    the reseeded slot come out with sentinel bounds (their center moved a
+    split, not a drift — carried bounds would be wrong), and subsequent
+    bounded steps still match the unbounded reseed path bit-for-bit."""
+    from repro.core.kmeans import kmeans_step, kmeans_step_bounded
+
+    d = 8
+    a = np.zeros((40, d), np.float32)
+    a[:, 0] = 1.0
+    b_ = np.zeros((40, d), np.float32)
+    b_[:, 1] = 1.0
+    x = np.concatenate([a, b_]) + 0.05 * rng.normal(size=(80, d)).astype(
+        np.float32)
+    x = l2_normalize(jnp.asarray(x))
+    init = np.zeros((3, d), np.float32)
+    init[0, 0] = 1.0
+    init[1, 1] = 1.0
+    init[2, 0] = -1.0  # antipodal: no document picks it -> reseeds
+    init = jnp.asarray(init)
+
+    bounds = ops.bounds_identity(80)
+    c_b, st_ = kmeans_step_bounded(
+        x, init, init, bounds, 3, reseed="split")
+    c_u, idx_u, _, _, _ = kmeans_step(x, init, 3, reseed="split")
+    np.testing.assert_array_equal(np.asarray(c_b), np.asarray(c_u))
+    np.testing.assert_array_equal(np.asarray(st_.idx), np.asarray(idx_u))
+    # slot 2 was reseeded by splitting a donor cluster: exactly the rows of
+    # that one donor cluster (nothing was assigned to slot 2) come out with
+    # sentinel bounds; everyone else keeps their refreshed bounds
+    stale = np.asarray(st_.bounds.idx) == -1
+    assert stale.any()
+    labs = np.asarray(st_.idx)
+    donors = set(labs[stale].tolist())
+    assert len(donors) == 1
+    assert (stale == (labs == donors.pop())).all()
+
+    # next bounded step (real drift, carried bounds) still matches brute
+    c_b2, st2 = kmeans_step_bounded(x, c_b, init, st_.bounds, 3,
+                                    reseed="split")
+    c_u2, idx_u2, _, _, _ = kmeans_step(x, c_b, 3, reseed="split")
+    np.testing.assert_array_equal(np.asarray(c_b2), np.asarray(c_u2))
+    np.testing.assert_array_equal(np.asarray(st2.idx), np.asarray(idx_u2))
+
+
+def test_reseed_noop_keeps_bounds(blob_data):
+    """No empty cluster: reseed='split' must not invalidate anything."""
+    from repro.core.kmeans import kmeans_step_bounded
+
+    x, _, k = blob_data
+    from repro.core.kmeans import init_random_centers
+
+    init = init_random_centers(jax.random.PRNGKey(0), x, k)
+    _, st_ = kmeans_step_bounded(
+        x, init, init, ops.bounds_identity(x.shape[0]), k, reseed="split")
+    if int(np.asarray(st_.counts).min()) > 0:
+        assert (np.asarray(st_.bounds.idx) >= 0).all()
+
+
+# ------------------------------------------------------------ core parity
+
+
+def test_kmeans_fit_bounded_parity(blob_data):
+    from repro.core.kmeans import kmeans_fit
+
+    x, _, k = blob_data
+    init = x[:k]
+    for impl in ("xla", "pallas_interpret"):
+        # bit-identity is within-impl: the Pallas stats tail tiles its
+        # accumulation differently from XLA's einsum, so the brute baseline
+        # must come from the same impl
+        want = kmeans_fit(x, init, k, max_iters=8, tol=0.0, bounded=False,
+                          impl=impl)
+        got = kmeans_fit(x, init, k, max_iters=8, tol=0.0, bounded=True,
+                         impl=impl)
+        np.testing.assert_array_equal(
+            np.asarray(want.assignment), np.asarray(got.assignment),
+            err_msg=impl)
+        np.testing.assert_array_equal(
+            np.asarray(want.centers), np.asarray(got.centers), err_msg=impl)
+
+
+def test_kmeans_fit_stream_bounded_parity(rng):
+    """Streaming bounds carry (host blocks between passes), including a
+    non-chunk-multiple n, and the prune-rate profile hook."""
+    from repro.core.kmeans import kmeans_fit_stream
+    from repro.text.stream import CorpusStream
+
+    n, k, d = 530, 8, 32  # 530 = 4*128 + 18: short last chunk
+    x = np.asarray(_blobs(rng, n, k, d))
+    init = jnp.asarray(x[:k])
+    stream = CorpusStream.from_array(x, chunk=128)
+    want = kmeans_fit_stream(stream, init, k, max_iters=6, tol=0.0,
+                             bounded=False)
+    prof = {}
+    got = kmeans_fit_stream(stream, init, k, max_iters=6, tol=0.0,
+                            bounded=True, profile=prof)
+    np.testing.assert_array_equal(
+        np.asarray(want.assignment), np.asarray(got.assignment))
+    np.testing.assert_array_equal(
+        np.asarray(want.centers), np.asarray(got.centers))
+    rates = prof["prune_rate"]
+    assert len(rates) >= 2 and all(0.0 <= r <= 1.0 for r in rates)
+    assert max(rates) > 0.0  # blobs settle: pruning must fire
+
+    gp = kmeans_fit_stream(stream, init, k, max_iters=6, tol=0.0,
+                           bounded=True, impl="pallas_interpret")
+    np.testing.assert_array_equal(
+        np.asarray(want.assignment), np.asarray(gp.assignment))
+
+
+def test_bkc_and_buckshot_bounded_parity(rng):
+    from repro.core.bkc import bkc_fit, bkc_fit_stream
+    from repro.core.buckshot import buckshot_fit
+    from repro.text.stream import CorpusStream
+
+    n, d, big_k, k = 300, 32, 24, 4
+    x = _blobs(rng, n, 6, d)
+    init = x[:big_k]
+    want = bkc_fit(x, init, big_k=big_k, k=k, bounded=False)
+    got = bkc_fit(x, init, big_k=big_k, k=k, bounded=True)
+    np.testing.assert_array_equal(
+        np.asarray(want.assignment), np.asarray(got.assignment))
+
+    stream = CorpusStream.from_array(np.asarray(x), chunk=128)
+    ws = bkc_fit_stream(stream, init, big_k, k, bounded=False)
+    gs = bkc_fit_stream(stream, init, big_k, k, bounded=True)
+    np.testing.assert_array_equal(
+        np.asarray(ws.assignment), np.asarray(gs.assignment))
+
+    sidx = jnp.asarray(rng.choice(n, size=60, replace=False).astype(np.int32))
+    wb = buckshot_fit(x, sidx, 8, bounded=False)
+    gb = buckshot_fit(x, sidx, 8, bounded=True)
+    np.testing.assert_array_equal(
+        np.asarray(wb.kmeans.assignment), np.asarray(gb.kmeans.assignment))
+
+
+def test_bounds_enabled_env_default(monkeypatch):
+    monkeypatch.delenv("REPRO_ASSIGN_BOUNDS", raising=False)
+    assert ops.bounds_enabled(None) is False
+    assert ops.bounds_enabled(True) is True
+    monkeypatch.setenv("REPRO_ASSIGN_BOUNDS", "1")
+    assert ops.bounds_enabled(None) is True
+    assert ops.bounds_enabled(False) is False  # explicit flag wins
+
+
+# ------------------------------------------------------------ distributed
+
+
+def test_distributed_bounded_parity_4dev():
+    """Bounded == unbounded bit-for-bit on a 4-device mesh, resident AND
+    streaming (shard-local bounds, drift on the bcast, one psum per pass)."""
+    env4 = dict(ENV, XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent("""
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.common import l2_normalize
+    from repro.distrib.cluster import (
+        kmeans_distributed, kmeans_distributed_stream,
+        bkc_distributed, bkc_distributed_stream,
+    )
+    from repro.text.stream import CorpusStream
+
+    mesh = Mesh(np.array(jax.devices()).reshape(4), ("data",))
+    rng = np.random.default_rng(1)
+    n, d, k = 512, 32, 16
+    c0 = rng.normal(size=(k, d)) * 3.0
+    lab = rng.integers(0, k, size=n)
+    x = l2_normalize(jnp.asarray(
+        (c0[lab] + 0.3 * rng.normal(size=(n, d))).astype(np.float32)))
+    w = jnp.ones((n,), jnp.float32)
+    init = x[:k]
+
+    a = kmeans_distributed(mesh, ("data",), x, w, init, k,
+                           max_iters=5, tol=0.0, bounded=False)
+    b = kmeans_distributed(mesh, ("data",), x, w, init, k,
+                           max_iters=5, tol=0.0, bounded=True)
+    np.testing.assert_array_equal(np.asarray(a.assignment),
+                                  np.asarray(b.assignment))
+    np.testing.assert_array_equal(np.asarray(a.centers),
+                                  np.asarray(b.centers))
+
+    st = CorpusStream.from_array(np.asarray(x), chunk=128)
+    prof = {}
+    sa = kmeans_distributed_stream(mesh, ("data",), st, init, k,
+                                   max_iters=5, tol=0.0, bounded=False)
+    sb = kmeans_distributed_stream(mesh, ("data",), st, init, k,
+                                   max_iters=5, tol=0.0, bounded=True,
+                                   profile=prof)
+    np.testing.assert_array_equal(np.asarray(sa.assignment),
+                                  np.asarray(sb.assignment))
+    np.testing.assert_array_equal(np.asarray(sa.centers),
+                                  np.asarray(sb.centers))
+    assert max(prof["prune_rate"]) > 0.0, prof
+
+    ba = bkc_distributed(mesh, ("data",), x, w, init, k, 4, bounded=False)
+    bb = bkc_distributed(mesh, ("data",), x, w, init, k, 4, bounded=True)
+    np.testing.assert_array_equal(np.asarray(ba.assignment),
+                                  np.asarray(bb.assignment))
+    fa = bkc_distributed_stream(mesh, ("data",), st, init, k, 4,
+                                bounded=False)
+    fb = bkc_distributed_stream(mesh, ("data",), st, init, k, 4,
+                                bounded=True)
+    np.testing.assert_array_equal(np.asarray(fa.assignment),
+                                  np.asarray(fb.assignment))
+    print("DIST BOUNDS OK")
+        """)],
+        capture_output=True, text=True, timeout=600, env=env4, cwd=REPO,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "DIST BOUNDS OK" in out.stdout
+
+
+# ------------------------------------------------------------ hypothesis
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 80), k=st.integers(1, 24), d=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bounds_invariants_under_random_drift(n, k, d, seed):
+    """After a bounded pass, perturb the centers arbitrarily and deflate:
+    lo' must stay a LOWER bound on the sim to the carried center and hi' an
+    UPPER bound on the best other-center sim — the exactness invariant the
+    pruning test relies on."""
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(n, d)).astype(np.float32))
+    c = jnp.asarray(r.normal(size=(k, d)).astype(np.float32))
+    st_ = ops.assign_stats_bounded(
+        x, c, ops.bounds_identity(n), jnp.zeros((k,), jnp.float32))
+    delta = jnp.asarray(
+        (r.normal(size=(k, d)) * r.uniform(0, 0.5)).astype(np.float32))
+    c2 = c + delta
+    drift = jnp.sqrt(jnp.sum(delta.astype(jnp.float32) ** 2, axis=1))
+    rownorm = jnp.sqrt(jnp.einsum("nd,nd->n", x, x))
+    ok, pidx, lo_adj, hi_adj = ref.deflate_bounds(
+        st_.bounds.idx, st_.bounds.lo, st_.bounds.hi, rownorm, drift)
+    sims = np.asarray(jnp.einsum(
+        "nd,kd->nk", x, c2, preferred_element_type=jnp.float32))
+    okn = np.asarray(ok)
+    pid = np.asarray(pidx)
+    own = sims[np.arange(n), pid]
+    if k > 1:
+        masked = sims.copy()
+        masked[np.arange(n), pid] = np.float32(np.finfo(np.float32).min)
+        other = masked.max(axis=1)
+    else:
+        other = np.full((n,), np.float32(np.finfo(np.float32).min))
+    tol = 1e-4 + 1e-5 * d
+    assert (np.asarray(lo_adj)[okn] <= own[okn] + tol).all()
+    if k > 1:
+        assert (np.asarray(hi_adj)[okn] >= other[okn] - tol).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 100), k=st.integers(1, 40), d=st.integers(1, 60),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bounded_pallas_property(n, k, d, seed):
+    """Random shapes (padding paths included): Pallas bounded labels ==
+    brute labels, with sentinel bounds and with a carried second pass."""
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(n, d)).astype(np.float32))
+    c = jnp.asarray(r.normal(size=(k, d)).astype(np.float32))
+    want = np.asarray(ref.assign_stats(x, c)[0])
+    b = ops.bounds_identity(n)
+    zero = jnp.zeros((k,), jnp.float32)
+    got = ops.assign_stats_bounded(x, c, b, zero, impl="pallas_interpret")
+    np.testing.assert_array_equal(want, np.asarray(got.idx))
+    # second pass under small drift, carried bounds
+    c2 = c + 0.01 * jnp.asarray(r.normal(size=(k, d)).astype(np.float32))
+    drift = jnp.sqrt(jnp.sum((c2 - c) ** 2, axis=1))
+    want2 = np.asarray(ref.assign_stats(x, c2)[0])
+    got2 = ops.assign_stats_bounded(
+        x, c2, got.bounds, drift, impl="pallas_interpret")
+    np.testing.assert_array_equal(want2, np.asarray(got2.idx))

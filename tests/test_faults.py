@@ -410,13 +410,15 @@ _KILL_JOB = """
 """
 
 
-def _run_kill_job(tmp_path, tag: str, *, devices: int, fault: str | None):
+def _run_kill_job(tmp_path, tag: str, *, devices: int, fault: str | None,
+                  extra_env: dict | None = None):
     env = dict(
         ENV,
         CKPT_DIR=str(tmp_path / f"ckpt-{tag}"),
         OUT=str(tmp_path / f"out-{tag}.npy"),
         XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
         MESH="1" if devices > 1 else "0",
+        **(extra_env or {}),
     )
     if fault:
         env["REPRO_FAULTS"] = fault
@@ -463,6 +465,79 @@ def test_sigkill_resume_bit_identical(tmp_path, devices):
     )
     # completion cleaned every snapshot and stored result
     assert not [p for p in os.listdir(env["CKPT_DIR"]) if p.endswith(".ckpt")]
+
+
+@pytest.mark.parametrize("devices", [1, 4])
+def test_sigkill_resume_bit_identical_bounded(tmp_path, devices):
+    """Same kill/restart protocol, but with bound-pruned assignment armed
+    (REPRO_ASSIGN_BOUNDS=1): the bounds carry rides the snapshot, and the
+    resumed run must equal a clean bounded run on assignments AND centers.
+    (Prune COUNTS may legitimately differ on resume — a skipped pass restarts
+    the carry from the sentinel — which is why the contract is labels and
+    centers, never bounds state.)"""
+    benv = {"REPRO_ASSIGN_BOUNDS": "1"}
+    out, _ = _run_kill_job(tmp_path, f"boracle{devices}", devices=devices,
+                           fault=None, extra_env=benv)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+
+    out, env = _run_kill_job(tmp_path, f"bkill{devices}", devices=devices,
+                             fault="kill@g28", extra_env=benv)
+    assert out.returncode == -signal.SIGKILL, (
+        f"expected SIGKILL death, got rc={out.returncode}\n"
+        f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    )
+    assert not os.path.exists(env["OUT"])
+    assert os.listdir(env["CKPT_DIR"])
+
+    env.pop("REPRO_FAULTS")
+    out2 = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_KILL_JOB)],
+        capture_output=True, text=True, timeout=600, env=env, cwd=REPO,
+    )
+    assert out2.returncode == 0, f"STDOUT:\n{out2.stdout}\nSTDERR:\n{out2.stderr}"
+
+    np.testing.assert_array_equal(
+        np.load(env["OUT"]), np.load(tmp_path / f"out-boracle{devices}.npy")
+    )
+    np.testing.assert_array_equal(
+        np.load(env["OUT"] + ".centers.npy"),
+        np.load(str(tmp_path / f"out-boracle{devices}.npy") + ".centers.npy"),
+    )
+    assert not [p for p in os.listdir(env["CKPT_DIR"]) if p.endswith(".ckpt")]
+
+
+def test_bounded_pallas_failure_degrades_to_xla(_pallas_armed):
+    """assign_stats_bounded shares the once-per-process guard: a Pallas
+    failure degrades it to its XLA pair with identical outputs, and the
+    second armed fault is never consumed (degradation is sticky)."""
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=(53, 24)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(6, 24)).astype(np.float32))
+    b = ops.bounds_identity(53)
+    drift = jnp.zeros((6,), jnp.float32)
+    want = ops.assign_stats_bounded(x, c, b, drift, impl="xla")
+
+    plan = faults.install("pallasx2")
+    assert not ops.pallas_degraded()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        got = ops.assign_stats_bounded(x, c, b, drift, impl="pallas")
+    assert ops.pallas_degraded()
+    assert any("degrading to the XLA" in str(wi.message) for wi in w)
+    np.testing.assert_array_equal(np.asarray(want.idx), np.asarray(got.idx))
+    np.testing.assert_array_equal(
+        np.asarray(want.counts), np.asarray(got.counts))
+    np.testing.assert_array_equal(
+        np.asarray(want.sums), np.asarray(got.sums))
+
+    # sticky: a fresh shape re-traces but skips Pallas without consulting
+    # the plan — the second armed fault stays unconsumed
+    x2 = jnp.asarray(rng.normal(size=(59, 24)).astype(np.float32))
+    b2 = ops.bounds_identity(59)
+    got2 = ops.assign_stats_bounded(x2, c, b2, drift, impl="pallas")
+    want2 = ops.assign_stats_bounded(x2, c, b2, drift, impl="xla")
+    np.testing.assert_array_equal(np.asarray(want2.idx), np.asarray(got2.idx))
+    assert plan.fired("pallas") == 1
 
 
 # ------------------------------------------------------------ reseed policy

@@ -292,9 +292,8 @@ def test_stream_stats_fold_bitexact_integer_data():
     one = ops.assign_stats(jnp.asarray(x), c)
     for chunk in (256, 250, 1000):
         st = CorpusStream.from_array(x, chunk=chunk)
-        (sums, counts, min_sim, sumsq), idx, sim, _ = _stream_pass(
-            st, c, 11, "xla", collect=True
-        )
+        out = _stream_pass(st, c, 11, "xla", collect=True)
+        (sums, counts, min_sim, sumsq), idx, sim = out.stats, out.idx, out.best_sim
         np.testing.assert_array_equal(np.asarray(one.sums), np.asarray(sums))
         np.testing.assert_array_equal(np.asarray(one.counts), np.asarray(counts))
         np.testing.assert_array_equal(np.asarray(one.min_sim), np.asarray(min_sim))

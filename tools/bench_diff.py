@@ -28,7 +28,11 @@ import sys
 
 # derived-dict keys that are deterministic resource footprints; when a row
 # records one on both sides it replaces wall time as the primary gate
-ANALYTIC_KEYS = ("shuffle_bytes", "peak_rss_mb")
+ANALYTIC_KEYS = ("shuffle_bytes", "peak_rss_mb", "center_dists_computed")
+
+# analytic keys where MORE is better (e.g. the fraction of rows the bounds
+# carry prunes): a regression is the metric DROPPING past the threshold
+ANALYTIC_KEYS_MAX = ("prune_rate",)
 
 # wall time on analytic-gated rows still trips at WALL_SLACK x threshold —
 # a backstop for real disasters, far above load-noise amplitude
@@ -63,12 +67,22 @@ def gated_metrics(
 ) -> list[tuple[str, float, float, float]]:
     """The (label, old, new, slack) metric pairs that gate this row: every
     analytic key present on both sides (slack 1) plus a loose wall backstop
-    (slack WALL_SLACK), else best-of-N wall time alone (slack 1)."""
+    (slack WALL_SLACK), else best-of-N wall time alone (slack 1).
+
+    Higher-is-better analytic keys (ANALYTIC_KEYS_MAX) are gated on their
+    reciprocal so one direction convention — bigger ratio = regression —
+    covers every metric downstream."""
     d_old = parse_derived(old_row.get("derived", ""))
     d_new = parse_derived(new_row.get("derived", ""))
     pairs = [
         (key, d_old[key], d_new[key], 1.0)
         for key in ANALYTIC_KEYS
+        if key in d_old and key in d_new and d_old[key] > 0
+    ]
+    pairs += [
+        # a collapse to 0 must still trip the gate, hence the floor
+        (key, 1.0 / d_old[key], 1.0 / max(d_new[key], 1e-9), 1.0)
+        for key in ANALYTIC_KEYS_MAX
         if key in d_old and key in d_new and d_old[key] > 0
     ]
     t_old = float(old_row["us_per_call"])
