@@ -663,9 +663,120 @@ def stream_oocore():
         f"guard_overhead_pct={100.0 * (wall_grd - wall_on) / wall_on:.1f}")
 
 
+def bench_serve():
+    """Online serving (DESIGN.md §14): the resident-model ClusterService.
+
+    Three rows: healthy assign latency under concurrent callers (p50/p99 of
+    per-request wall time through admission queue + micro-batcher + jitted
+    graph), ingest throughput (docs/s folded into the merge_stats carry),
+    and overload behavior with an injected per-batch worker stall
+    (``stall@assignx*``) — the shed rate at admission plus the p99 of the
+    ACCEPTED requests, which stays bounded by queue_cap/max_batch stalls
+    rather than growing with offered load. p99_ms and shed_rate gate in
+    tools/bench_diff.py; ingest_docs_s gates as higher-is-better."""
+    import threading
+
+    from repro.serve import ClusterService, ServiceConfig, ShedError
+    from repro.testing import faults as _faults
+
+    rng = np.random.default_rng(17)
+    n_base, dim, k = (256, 256, 8) if SMALL else (1024, 512, 16)
+
+    def texts(n: int) -> list[str]:
+        return [
+            " ".join(f"tok{v}" for v in rng.integers(0, 60, 12))
+            for _ in range(n)
+        ]
+
+    cfg = ServiceConfig(
+        k=k, dim=dim, chunk=256, max_batch=32, queue_cap=128,
+        sample_size=64, kmeans_iters=2,
+        drift_mass=1e9, drift_obj=1e9,  # bench serves one model version
+    )
+    svc = ClusterService.fit(texts(n_base), jax.random.PRNGKey(2), config=cfg)
+    lock = threading.Lock()
+    try:
+        svc.assign(texts(8))  # warmup: compile the slab graph
+
+        # healthy latency: concurrent callers racing into the micro-batcher
+        reqs = [texts(8) for _ in range(64)]
+        lats: list[float] = []
+
+        def caller(batch):
+            while True:  # healthy clients retry a shed with backoff
+                try:
+                    out = svc.assign(batch)
+                    break
+                except ShedError:
+                    time.sleep(0.005)
+            with lock:
+                lats.append(out.latency_s)
+
+        ts = [threading.Thread(target=caller, args=(b,)) for b in reqs]
+        t0 = time.perf_counter()
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        wall = time.perf_counter() - t0
+        lat = np.asarray(lats, np.float64)
+        p50 = float(np.percentile(lat, 50) * 1e3)
+        p99 = float(np.percentile(lat, 99) * 1e3)
+        row(f"serve_assign_{len(reqs)}x8_d{dim}_k{k}", p50 * 1e3,
+            f"p50_ms={p50:.3f};p99_ms={p99:.3f};"
+            f"docs_s={len(reqs) * 8 / wall:.0f};shed_rate=0.000")
+
+        # ingest throughput: fold batches into the live CF stats
+        batches = [texts(32) for _ in range(16)]
+        t0 = time.perf_counter()
+        for b in batches:
+            svc.ingest(b)
+        wall = time.perf_counter() - t0
+        row(f"serve_ingest_{len(batches)}x32_d{dim}_k{k}",
+            wall / len(batches) * 1e6,
+            f"ingest_docs_s={len(batches) * 32 / wall:.0f}")
+
+        # overload: every micro-batch stalls 0.25s, 48 callers burst-arrive.
+        # Admission sheds past queue_cap; ACCEPTED requests all complete and
+        # their p99 is bounded by (queue_cap/max_batch + 1) stalls, not by
+        # the offered load.
+        _faults.install("stall@assignx*:0.25")
+        stall_lats: list[float] = []
+        shed = [0]
+
+        def pressured(batch):
+            try:
+                out = svc.assign(batch, deadline=60.0)
+                with lock:
+                    stall_lats.append(out.latency_s)
+            except ShedError:
+                with lock:
+                    shed[0] += 1
+
+        stress = [texts(8) for _ in range(48)]
+        ts = [threading.Thread(target=pressured, args=(b,)) for b in stress]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        _faults.clear()
+        assert shed[0] + len(stall_lats) == len(stress)  # none dropped
+        sl = np.asarray(stall_lats, np.float64)
+        p99_stall = float(np.percentile(sl, 99) * 1e3) if sl.size else 0.0
+        row(f"serve_shed_under_stall_{len(stress)}x8_d{dim}_k{k}",
+            p99_stall * 1e3,
+            f"shed_rate={shed[0] / len(stress):.3f};"
+            f"p99_stall_ms={p99_stall:.1f};"
+            f"accepted={len(stall_lats)};"
+            f"stall_bound_ms={(cfg.queue_cap / cfg.max_batch + 1) * 250:.0f}")
+    finally:
+        _faults.clear()
+        svc.close()
+
+
 TABLES = [table1, table2, table3, table4, table5, table6, table7, table8,
           table9, table10, kernel_bench, assign_bounded, phase1_bench,
-          phase1_distributed, stream_oocore]
+          phase1_distributed, stream_oocore, bench_serve]
 
 
 def main(argv: list[str] | None = None) -> None:

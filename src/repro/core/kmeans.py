@@ -288,6 +288,36 @@ def kmeans(
     )
 
 
+@functools.partial(jax.jit, static_argnames=("impl",))
+def assign_batch(
+    x: jax.Array,
+    centers: jax.Array,
+    w: jax.Array | None = None,
+    *,
+    index: "ops.CenterIndex | None" = None,
+    impl: str = "xla",
+) -> tuple[jax.Array, jax.Array]:
+    """One serving micro-batch: nearest-center assignment through the
+    bound-pruned kernel. Batch rows are new every call, so there is no
+    cross-batch bounds carry — the sentinel identity goes in, and pruning
+    comes from the two-level center ``index`` (slab skipping on the Pallas
+    path). Labels are bit-identical to the brute-force sweep either way.
+
+    Returns ``(idx, best_sim)`` for the batch; weight-0 (padding) rows get
+    whatever the sweep computes and must be sliced off by the caller.
+    """
+    st = ops.assign_stats_bounded(
+        x,
+        centers,
+        ops.bounds_identity(x.shape[0]),
+        jnp.zeros((centers.shape[0],), jnp.float32),
+        w,
+        index=index,
+        impl=impl,
+    )
+    return st.idx, st.best_sim
+
+
 # ------------------------------------------------------------------ streaming
 
 

@@ -87,6 +87,12 @@ def reservoir_sample_stream(
     checkpointable: a restored carry replays the identical per-chunk scores
     for the remaining chunks. The snapshot meta binds the rng key's content,
     so a snapshot folded under a different key never resumes this pass.
+
+    The ``s == stream.n`` edge returns exactly the real rows: pad rows score
+    -1.0, STRICTLY below any real row's [0, 1) draw (never tied — a mask
+    multiply would score pads 0.0, interleaved with real rows drawing 0.0),
+    and the carry's -2.0 filler loses to both, so neither can displace a
+    real row from the top-s. ``s > stream.n`` is rejected up front.
     Returns (rows (s, d) device, global indices (s,) np.int32, sorted by
     descending score — a uniformly shuffled order).
     """

@@ -729,12 +729,21 @@ def sample_rows_distributed(
     the sample." """
     n_shards = mesh_axis_size(mesh, axes)
     n_local = x.shape[0] // n_shards
+    n_real = int(jnp.sum(w > 0))
+    if s > n_real:
+        raise ValueError(
+            f"cannot sample {s} rows from {n_real} real rows without"
+            " replacement"
+        )
 
     def sample_map(data, bcast):
         ws = data["w"]
         me = jax.lax.axis_index(axes)
         sub = jax.random.fold_in(bcast["key"], me)
-        u = jax.random.uniform(sub, ws.shape) * jnp.where(ws > 0, 1.0, 0.0)
+        # pad rows score -1, strictly below any real row's [0, 1) draw —
+        # multiplying by the mask instead would score pads exactly 0.0,
+        # tied with (and interleaved among) real rows drawing 0.0
+        u = jnp.where(ws > 0, jax.random.uniform(sub, ws.shape), -1.0)
         top = min(s, n_local)
         scores, li = jax.lax.top_k(u, top)
         gi = li.astype(jnp.int32) + me.astype(jnp.int32) * n_local

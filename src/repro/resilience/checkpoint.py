@@ -293,6 +293,22 @@ class DiskCheckpointer(Checkpointer):
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, path)  # atomic: a kill mid-write leaves only the tmp
+        self._fsync_dir()  # the RENAME must also survive power loss: fsyncing
+        # the file persists its blocks, but the directory entry pointing at
+        # them lives in the directory inode — without this a crash after
+        # replace can roll the entry back to the old snapshot (or nothing)
+
+    def _fsync_dir(self) -> None:
+        try:
+            fd = os.open(self.directory, os.O_RDONLY)
+        except OSError:
+            return  # e.g. platforms that refuse O_RDONLY on directories
+        try:
+            os.fsync(fd)
+        except OSError:
+            pass  # durability is best-effort on filesystems without dir fsync
+        finally:
+            os.close(fd)
 
     def _get(self, key: str) -> bytes | None:
         try:

@@ -1,1 +1,24 @@
-"""Serving substrate: batched prefill+decode engine over the model zoo."""
+"""Serving substrate: the batched prefill+decode engine over the model zoo,
+and the resident-model online clustering service (DESIGN.md §14)."""
+
+from repro.serve.cluster_service import (
+    AssignResult,
+    ClusterService,
+    DeadlineError,
+    FittedModel,
+    IngestError,
+    IngestReceipt,
+    ServiceConfig,
+    ShedError,
+)
+
+__all__ = [
+    "AssignResult",
+    "ClusterService",
+    "DeadlineError",
+    "FittedModel",
+    "IngestError",
+    "IngestReceipt",
+    "ServiceConfig",
+    "ShedError",
+]

@@ -18,19 +18,36 @@ Chunk faults address their trigger as ``@cI`` (chunk index I within ANY pass
 suffix bounds how many times the fault fires (default 1; ``x*`` = unlimited),
 which is what lets a bounded retry succeed after K injected failures.
 
+SERVE-scoped faults (the online clustering service, serve/cluster_service.py)
+address a NAMED trigger point instead of a chunk index: ``assign`` (the
+micro-batch worker, before it runs a batch), ``ingest`` (an ingest batch's
+rows, before the finite check), ``refit`` (inside the background refit
+worker, at the top of each attempt), ``validate`` (the candidate centers,
+before hot-swap validation). At a serve point ``kill`` raises exactly like
+``raise`` — a worker THREAD cannot be SIGKILLed, so "kill the refit worker"
+means its attempt dies with an unhandled exception (the crash-retry path);
+process-level SIGKILL during a refit still goes through ``kill@gN`` on the
+refit's own chunk stream. ``nan``/``inf`` at a serve point corrupt the array
+handed to ``on_serve`` (an ingest batch, candidate centers) instead of a
+stream chunk.
+
 Spec grammar (comma-separated entries)::
 
-  raise@c2x3     raise on chunk 2 of any pass, first 3 times it is produced
-  nan@g17        NaN-corrupt the 18th chunk served in this process
-  stall@c0:1.5   sleep 1.5 s before yielding chunk 0 (once)
-  kill@g9        SIGKILL before yielding the 10th chunk served
-  pallasx2       first 2 Pallas dispatches raise
+  raise@c2x3      raise on chunk 2 of any pass, first 3 times it is produced
+  nan@g17         NaN-corrupt the 18th chunk served in this process
+  stall@c0:1.5    sleep 1.5 s before yielding chunk 0 (once)
+  kill@g9         SIGKILL before yielding the 10th chunk served
+  pallasx2        first 2 Pallas dispatches raise
+  kill@refit      the refit worker's next attempt dies (InjectedFault)
+  stall@assign:2  the assign worker sleeps 2 s before its next batch
+  nan@ingest      the next ingest batch's first row becomes NaN
 
 Wiring: ``text/stream.run_pass``'s producer calls ``on_chunk`` for every
 chunk it generates; ``kernels/ops`` calls ``pallas_fault`` before entering a
-Pallas path. Both consult ``active()``, which is ``None`` unless a plan was
-installed programmatically (``install``/``inject``) or via ``REPRO_FAULTS``
-— the no-plan fast path is a single global read.
+Pallas path; ``serve/cluster_service.py`` calls ``serve_point`` at the four
+named points above. All consult ``active()``, which is ``None`` unless a
+plan was installed programmatically (``install``/``inject``) or via
+``REPRO_FAULTS`` — the no-plan fast path is a single global read.
 """
 
 from __future__ import annotations
@@ -47,6 +64,8 @@ import numpy as np
 
 _CHUNK_KINDS = ("raise", "nan", "inf", "stall", "kill")
 _KINDS = _CHUNK_KINDS + ("pallas",)
+# named trigger points inside serve/cluster_service.py (see module docstring)
+_SERVE_POINTS = ("assign", "ingest", "refit", "validate")
 
 
 class InjectedFault(RuntimeError):
@@ -56,14 +75,15 @@ class InjectedFault(RuntimeError):
 @dataclass
 class Fault:
     kind: str
-    # trigger: ("c", chunk_index) | ("g", global_serve_index) | None (pallas)
-    where: tuple[str, int] | None = None
+    # trigger: ("c", chunk_index) | ("g", global_serve_index)
+    #        | ("s", serve_point_name) | None (pallas)
+    where: tuple[str, int] | tuple[str, str] | None = None
     seconds: float = 0.0  # stall duration
     times: int | None = 1  # remaining firings; None = unlimited
     fired: int = 0  # total firings so far (test observability)
 
     def _matches(self, ci: int, served: int) -> bool:
-        if self.where is None:
+        if self.where is None or self.where[0] == "s":
             return False
         mode, at = self.where
         return (ci if mode == "c" else served) == at
@@ -117,17 +137,25 @@ def _parse_entry(entry: str) -> Fault:
             raise ValueError(f"'pallas' fault takes no trigger address: {entry!r}")
         return Fault(kind=kind, where=None, times=times)
     if not where:
-        raise ValueError(f"chunk fault {entry!r} needs a trigger: @cI or @gN")
+        raise ValueError(
+            f"chunk fault {entry!r} needs a trigger: @cI, @gN, or a serve"
+            f" point {_SERVE_POINTS}"
+        )
+    if kind == "stall" and seconds <= 0:
+        raise ValueError(f"stall fault {entry!r} needs a duration: stall@c0:SECS")
+    if where in _SERVE_POINTS:
+        return Fault(kind=kind, where=("s", where), seconds=seconds, times=times)
     mode, idx = where[0], where[1:]
     if mode not in ("c", "g"):
         if where.isdigit():  # bare integer = chunk index
             mode, idx = "c", where
         else:
-            raise ValueError(f"bad trigger {where!r} in {entry!r}: use @cI or @gN")
+            raise ValueError(
+                f"bad trigger {where!r} in {entry!r}: use @cI, @gN, or one"
+                f" of {_SERVE_POINTS}"
+            )
     if not idx.isdigit():
         raise ValueError(f"bad trigger index {idx!r} in {entry!r}")
-    if kind == "stall" and seconds <= 0:
-        raise ValueError(f"stall fault {entry!r} needs a duration: stall@c0:SECS")
     return Fault(kind=kind, where=(mode, int(idx)), seconds=seconds, times=times)
 
 
@@ -172,6 +200,38 @@ class FaultPlan:
                 x[0, :] = np.nan if f.kind == "nan" else np.inf
                 ch = ch._replace(x=x)
         return ch
+
+    # -- serve-side --------------------------------------------------------
+    def on_serve(self, point: str, arr: Any = None) -> Any:
+        """Apply armed faults at a named serve point; returns ``arr`` (maybe
+        corrupted). 'kill' and 'raise' both raise ``InjectedFault`` here — a
+        worker thread cannot be SIGKILLed, so "kill the worker" means its
+        attempt dies with an unhandled exception; 'stall' sleeps; 'nan'/'inf'
+        corrupt the passed array's first row (ingest batch, candidate
+        centers) when one is given."""
+        if point not in _SERVE_POINTS:
+            raise ValueError(
+                f"unknown serve point {point!r}: expected one of {_SERVE_POINTS}"
+            )
+        with self._lock:
+            hits = [
+                f
+                for f in self.faults
+                if f.where == ("s", point) and f._consume()
+            ]
+        for f in hits:
+            if f.kind == "stall":
+                time.sleep(f.seconds)
+            elif f.kind in ("raise", "kill"):
+                raise InjectedFault(
+                    f"injected {f.kind} fault at serve point {point!r}"
+                )
+            elif f.kind in ("nan", "inf") and arr is not None:
+                arr = np.array(np.asarray(arr), dtype=np.float32, copy=True)
+                bad = np.nan if f.kind == "nan" else np.inf
+                if arr.ndim >= 1 and arr.shape[0] > 0:
+                    arr[0, ...] = bad
+        return arr
 
     # -- kernel-side -------------------------------------------------------
     def pallas_fault(self) -> None:
@@ -220,6 +280,14 @@ def clear() -> None:
     global _PLAN
     with _PLAN_LOCK:
         _PLAN = None
+
+
+def serve_point(point: str, arr: Any = None) -> Any:
+    """The service-side hook (serve/cluster_service.py): apply any armed
+    faults at the named point via the active plan; a no-op pass-through of
+    ``arr`` when no plan is installed."""
+    plan = active()
+    return arr if plan is None else plan.on_serve(point, arr)
 
 
 @contextlib.contextmanager

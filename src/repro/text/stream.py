@@ -173,6 +173,10 @@ class CorpusStream:
             gen, n=self.n, dim=self.dim if dim is None else dim, chunk=self.chunk
         )
 
+    def concat(self, *others: "CorpusStream") -> "CorpusStream":
+        """``concat_streams(self, *others)`` with this stream's chunk size."""
+        return concat_streams(self, *others, chunk=self.chunk)
+
     def materialize(self) -> np.ndarray:
         """Concatenate the stream back into a resident (n, dim) array —
         tests/oracles only; defeats the point everywhere else."""
@@ -180,6 +184,54 @@ class CorpusStream:
         if not parts:  # an n == 0 stream yields no chunks
             return np.zeros((0, self.dim), np.float32)
         return np.concatenate(parts, axis=0)[: self.n]
+
+
+def concat_streams(*streams, chunk: int | None = None) -> "CorpusStream":
+    """Concatenate row streams into ONE fixed-chunk stream.
+
+    Naive back-to-back chunk iteration would violate the ``from_blocks``
+    contract (each source's padded tail would land mid-stream), so chunks are
+    re-packed: padding rows (w == 0) are stripped and real rows re-blocked at
+    the target chunk size, preserving global row order. The result is
+    re-iterable like any stream — each pass re-opens every source — and
+    byte-identical to a single stream built over the concatenated rows with
+    the same chunk size (same blocks, same padding), so every downstream fold
+    (df, reservoir, K-Means) matches that oracle bit-for-bit.
+
+    The service's refit path is the motivating consumer: the fitted base
+    corpus (recomputed from texts) plus the already-vectorized ingested rows
+    stream as one corpus without materializing either.
+    """
+    if not streams:
+        raise ValueError("concat_streams needs at least one stream")
+    dims = {s.dim for s in streams}
+    if len(dims) != 1:
+        raise ValueError(f"streams disagree on dim: {sorted(dims)}")
+    dim = dims.pop()
+    chunk = int(chunk if chunk is not None else streams[0].chunk)
+    n = sum(s.n for s in streams)
+
+    def blocks() -> Iterator[np.ndarray]:
+        buf: list[np.ndarray] = []
+        have = 0
+        for s in streams:
+            for ch in s.chunks():
+                w = np.asarray(ch.w)
+                rows = np.asarray(ch.x, np.float32)[w > 0]
+                if rows.shape[0] == 0:
+                    continue
+                buf.append(rows)
+                have += rows.shape[0]
+                while have >= chunk:
+                    block = buf[0] if len(buf) == 1 else np.concatenate(buf)
+                    yield block[:chunk]
+                    rest = block[chunk:]
+                    buf = [rest] if rest.shape[0] else []
+                    have = rest.shape[0]
+        if have:
+            yield buf[0] if len(buf) == 1 else np.concatenate(buf)
+
+    return CorpusStream.from_blocks(blocks, n=n, dim=dim, chunk=chunk)
 
 
 # ------------------------------------------------------------------ executor

@@ -620,3 +620,186 @@ def test_tfidf_all_zero_row_stays_zero_and_finite():
     st = CorpusStream.from_array(counts, chunk=2)
     xs = tfidf.tfidf_stream(st).materialize()
     np.testing.assert_array_equal(np.asarray(xs), x)
+
+
+# ------------------------------------------------------------ serve faults
+
+
+def test_serve_fault_spec_grammar():
+    plan = FaultPlan.from_spec("kill@refit, stall@assign:2, nan@ingest, raise@validatex*")
+    assert plan.faults[0].where == ("s", "refit") and plan.faults[0].times == 1
+    assert plan.faults[1].where == ("s", "assign") and plan.faults[1].seconds == 2.0
+    assert plan.faults[2].where == ("s", "ingest")
+    assert plan.faults[3].where == ("s", "validate") and plan.faults[3].times is None
+    assert FaultPlan.from_spec("kill@refitx2").faults[0].times == 2
+
+
+@pytest.mark.parametrize("bad", ["kill@frobnicate", "stall@assign", "pallas@refit"])
+def test_serve_fault_spec_rejects(bad):
+    with pytest.raises(ValueError):
+        FaultPlan.from_spec(bad)
+
+
+def test_serve_point_kill_and_raise_both_raise():
+    """A worker THREAD cannot be SIGKILLed, so 'kill' at a serve point means
+    the attempt dies with InjectedFault — same as 'raise'."""
+    for kind in ("kill", "raise"):
+        plan = faults.install(f"{kind}@refit")
+        with pytest.raises(InjectedFault, match="refit"):
+            faults.serve_point("refit")
+        faults.serve_point("refit")  # budget consumed: second call is a no-op
+        assert plan.fired() == 1
+        faults.clear()
+
+
+def test_serve_point_nan_corrupts_only_the_given_array():
+    plan = faults.install("nan@ingest")
+    a = np.ones((3, 4), np.float32)
+    out = faults.serve_point("ingest", a)
+    assert np.isnan(out[0]).all() and np.isfinite(out[1:]).all()
+    np.testing.assert_array_equal(a, np.ones((3, 4), np.float32))  # copy, not in place
+    assert plan.fired("nan") == 1
+
+
+def test_serve_point_stall_sleeps():
+    faults.install("stall@assign:0.2")
+    t0 = time.monotonic()
+    faults.serve_point("assign")
+    assert time.monotonic() - t0 >= 0.15
+
+
+def test_serve_point_is_a_noop_without_a_plan():
+    a = np.ones((2, 2), np.float32)
+    assert faults.serve_point("assign", a) is a
+
+
+def test_serve_point_rejects_unknown_point():
+    faults.install("kill@refit")
+    with pytest.raises(ValueError, match="serve point"):
+        faults.serve_point("frobnicate")
+
+
+def test_serve_faults_never_fire_on_chunks_and_vice_versa():
+    """A serve-scoped fault must not trip a streaming pass, and a chunk fault
+    must not trip a serve point — the two trigger namespaces are disjoint."""
+    st, _ = _stream()
+    oracle = run_pass(st, _sum_fold, 0.0)
+    plan = faults.install("kill@refit, nan@ingest")
+    assert run_pass(st, _sum_fold, 0.0) == oracle
+    assert plan.fired() == 0
+    faults.clear()
+    plan = faults.install("raise@c0, nan@g1")
+    out = faults.serve_point("refit", np.ones((2, 2), np.float32))
+    assert np.isfinite(out).all() and plan.fired() == 0
+
+
+# ------------------------------------------------------------ retry policy
+
+
+def test_retry_policy_delay_bound_and_growth():
+    """delay(i) is min(base * 2^(i-1), max): monotone non-decreasing, doubles
+    exactly until the cap, and never exceeds the cap for ANY attempt."""
+    p = RetryPolicy(retries=10, base_delay=0.01, max_delay=1.0)
+    delays = [p.delay(i) for i in range(1, 32)]
+    assert delays[0] == p.base_delay
+    assert all(b >= a for a, b in zip(delays, delays[1:]))  # monotone
+    assert all(d <= p.max_delay for d in delays)  # bounded
+    for i, (a, b) in enumerate(zip(delays, delays[1:]), start=1):
+        if b < p.max_delay:
+            assert b == pytest.approx(2.0 * a)  # exact doubling pre-cap
+    assert p.delay(1_000) == p.max_delay  # no overflow surprise at huge i
+    assert p.delay(0) == p.base_delay  # attempt 0 clamps to the base
+
+
+def test_retry_policy_zero_base_never_sleeps(monkeypatch):
+    called = []
+    monkeypatch.setattr(time, "sleep", lambda s: called.append(s))
+    RetryPolicy(retries=3, base_delay=0.0).sleep(5)
+    assert called == []
+
+
+def test_stream_timeout_attribution_4dev_mesh():
+    """satellite: StreamTimeout pass/chunk attribution under stall@ injection
+    on a 4-device mesh — the watchdog lives in run_pass, which the
+    distributed fold drives too, so attribution must survive sharding."""
+    env = dict(
+        ENV,
+        XLA_FLAGS="--xla_force_host_platform_device_count=4",
+        REPRO_FAULTS="stall@c2:30",
+    )
+    code = """
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.distrib.sharding import make_flat_mesh
+    from repro.resilience import StreamTimeout
+    from repro.text import synth, tfidf
+
+    mesh = make_flat_mesh(4)
+    assert len(jax.devices()) == 4
+    st, _ = synth.stream_corpus(400, vocab=64, n_topics=4, seed=0, chunk=80)
+    try:
+        tfidf.df_fold_distributed(mesh, ("data",), st)
+    except StreamTimeout as e:
+        assert e.pass_id == "pass" and e.chunk == 2, (e.pass_id, e.chunk)
+        print("TIMEOUT ATTRIBUTED", e.chunk)
+    else:
+        raise AssertionError("stall did not become StreamTimeout")
+    """
+    env["REPRO_STREAM_TIMEOUT"] = "0.5"
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=600, env=env, cwd=REPO,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "TIMEOUT ATTRIBUTED 2" in out.stdout
+
+
+# ------------------------------------------------------------ disk durability
+
+
+def test_disk_checkpointer_fsyncs_directory_after_rename(tmp_path, monkeypatch):
+    """The atomic rename persists the directory ENTRY only if the directory
+    inode is fsynced too: _put must fsync (file, then directory)."""
+    import stat
+
+    synced = []
+    real_fsync = os.fsync
+
+    def spy(fd):
+        synced.append(stat.S_ISDIR(os.fstat(fd).st_mode))
+        real_fsync(fd)
+
+    monkeypatch.setattr(os, "fsync", spy)
+    ck = DiskCheckpointer(tmp_path / "ck")
+    ck.save_result("p", {"v": 1})
+    assert synced.count(False) >= 1  # the payload file
+    assert synced.count(True) >= 1  # the parent directory, after the rename
+    assert ck.load_result("p") == {"v": 1}
+
+
+def test_disk_checkpointer_survives_injected_dir_fsync_failure(
+    tmp_path, monkeypatch
+):
+    """Injected os-level fault: a filesystem that refuses directory fsync
+    (EINVAL — some network/overlay mounts) must degrade to best-effort,
+    never fail the write."""
+    import stat
+
+    real_fsync = os.fsync
+
+    def failing(fd):
+        if stat.S_ISDIR(os.fstat(fd).st_mode):
+            raise OSError(22, "Invalid argument")
+        real_fsync(fd)
+
+    monkeypatch.setattr(os, "fsync", failing)
+    ck = DiskCheckpointer(tmp_path / "ck")
+    ck.save_result("p", {"v": 2})  # must not raise
+    assert ck.load_result("p") == {"v": 2}
+
+    # and a directory that cannot even be opened read-only degrades the same
+    monkeypatch.setattr(
+        os, "open",
+        lambda *a, **k: (_ for _ in ()).throw(OSError(13, "denied")),
+    )
+    ck.save_result("q", {"v": 3})
+    assert ck.load_result("q") == {"v": 3}

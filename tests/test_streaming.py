@@ -127,6 +127,47 @@ def test_stream_from_blocks_enforces_contract():
     assert ok.materialize().shape == (11, 4)
 
 
+def test_concat_streams_bit_identical_to_single_stream():
+    """Re-chunked concatenation == one stream over the concatenated rows:
+    same blocks, same padding, same start offsets — so every downstream fold
+    (df, reservoir, K-Means) matches that oracle bit-for-bit. Also the
+    re-iterability contract: a second pass re-opens every source."""
+    from repro.text.stream import concat_streams
+
+    rng = np.random.default_rng(11)
+    rows = rng.random((57, 6)).astype(np.float32)
+    # three sources with different chunk sizes, each with a padded tail
+    parts = [
+        CorpusStream.from_array(rows[:20], chunk=7),
+        CorpusStream.from_array(rows[20:23], chunk=9),
+        CorpusStream.from_array(rows[23:], chunk=13),
+    ]
+    cat = concat_streams(*parts, chunk=10)
+    oracle = CorpusStream.from_array(rows, chunk=10)
+    assert cat.n == oracle.n and cat.n_chunks == oracle.n_chunks
+    for _pass in range(2):  # re-iterable
+        got, want = list(cat.chunks()), list(oracle.chunks())
+        assert len(got) == len(want)
+        for g, o in zip(got, want):
+            np.testing.assert_array_equal(g.x, o.x)
+            np.testing.assert_array_equal(g.w, o.w)
+            assert g.start == o.start
+
+
+def test_concat_streams_rejects_dim_mismatch_and_empty():
+    from repro.text.stream import concat_streams
+
+    a = CorpusStream.from_array(np.zeros((4, 3), np.float32))
+    b = CorpusStream.from_array(np.zeros((4, 5), np.float32))
+    with pytest.raises(ValueError, match="dim"):
+        concat_streams(a, b)
+    with pytest.raises(ValueError):
+        concat_streams()
+    # the .concat sugar keeps the receiver's chunk size
+    c = a.concat(CorpusStream.from_array(np.zeros((2, 3), np.float32)))
+    assert c.n == 6 and c.chunk == a.chunk
+
+
 def test_stream_reiterable(corpus):
     """Two passes over the same stream see identical chunks (the two-pass
     tf-idf / multi-iteration K-Means contract)."""
@@ -381,6 +422,18 @@ def test_reservoir_rejects_oversample():
         reservoir_sample_stream(st, 11, jax.random.PRNGKey(0))
 
 
+def test_reservoir_s_equals_n_returns_exactly_the_real_rows():
+    """The s == n edge: pad rows score -1.0 (strictly below any real [0, 1)
+    draw) and the carry filler -2.0 loses to both, so the sample is exactly
+    the n real rows — no pad leak, even with a heavily padded tail chunk."""
+    rng = np.random.default_rng(5)
+    x = rng.random((13, 4)).astype(np.float32)  # 13 rows, chunk 8 -> 3 pads
+    st = CorpusStream.from_array(x, chunk=8)
+    rows, gidx = reservoir_sample_stream(st, 13, jax.random.PRNGKey(2))
+    np.testing.assert_array_equal(np.sort(gidx), np.arange(13))
+    np.testing.assert_array_equal(np.asarray(rows)[np.argsort(gidx)], x)
+
+
 # ------------------------------------------------------------------ buckshot
 
 
@@ -610,6 +663,44 @@ def test_distributed_streaming_reservoir_matches_oracle_4dev():
     np.testing.assert_array_equal(np.asarray(gidx), want)
     np.testing.assert_allclose(np.asarray(rows), x[gidx], rtol=1e-6, atol=1e-7)
     print("DIST RESERVOIR OK")
+    """)
+
+
+def test_distributed_sample_rows_no_pad_leak_4dev():
+    """Regression: ``sample_rows_distributed`` used to score pad rows by a
+    mask MULTIPLY (exactly 0.0, tied with real rows drawing 0.0) and had no
+    oversample guard, so s > real rows silently returned zero pad rows as
+    sample members. Pads now score -1 and s == n_real returns exactly the
+    real rows; s > n_real raises."""
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp, pytest
+    from repro.distrib.cluster import sample_rows_distributed
+    from repro.distrib.sharding import (
+        make_flat_mesh, pad_rows_to_multiple, shard_rows)
+
+    mesh = make_flat_mesh(4)
+    rng = np.random.default_rng(8)
+    x = rng.random((10, 5)).astype(np.float32)  # pads to 12 rows: 2 pad rows
+    xp, w = pad_rows_to_multiple(jnp.asarray(x), 4)
+    xs = shard_rows(mesh, ("data",), xp)
+    ws = shard_rows(mesh, ("data",), w)
+
+    rows = sample_rows_distributed(mesh, ("data",), xs, ws, 10,
+                                   jax.random.PRNGKey(1))
+    got = np.asarray(rows)
+    # every real row sampled exactly once, zero pad rows
+    order = np.lexsort(got.T)
+    want = np.lexsort(x.T)
+    np.testing.assert_array_equal(got[order], x[want])
+
+    try:
+        sample_rows_distributed(mesh, ("data",), xs, ws, 11,
+                                jax.random.PRNGKey(1))
+    except ValueError as e:
+        assert "without" in str(e)
+    else:
+        raise AssertionError("oversample did not raise")
+    print("SAMPLE ROWS OK")
     """)
 
 

@@ -27,12 +27,20 @@ import json
 import sys
 
 # derived-dict keys that are deterministic resource footprints; when a row
-# records one on both sides it replaces wall time as the primary gate
-ANALYTIC_KEYS = ("shuffle_bytes", "peak_rss_mb", "center_dists_computed")
+# records one on both sides it replaces wall time as the primary gate.
+# p99_ms / shed_rate are the serving SLO pair (bench_serve): tail latency of
+# accepted assign requests and the fraction shed at admission under the
+# fixed injected-stall overload scenario — both bounded by queue geometry,
+# so they gate like footprints rather than like free-running wall time
+ANALYTIC_KEYS = (
+    "shuffle_bytes", "peak_rss_mb", "center_dists_computed",
+    "p99_ms", "shed_rate",
+)
 
 # analytic keys where MORE is better (e.g. the fraction of rows the bounds
-# carry prunes): a regression is the metric DROPPING past the threshold
-ANALYTIC_KEYS_MAX = ("prune_rate",)
+# carry prunes, or serve-side ingest throughput): a regression is the
+# metric DROPPING past the threshold
+ANALYTIC_KEYS_MAX = ("prune_rate", "ingest_docs_s")
 
 # wall time on analytic-gated rows still trips at WALL_SLACK x threshold —
 # a backstop for real disasters, far above load-noise amplitude
