@@ -440,21 +440,51 @@ def phase1_bench():
 
 
 def phase1_distributed():
-    """Distributed Borůvka phase 1 on a forced 4-device CPU mesh: the
-    shuffle-light per-component pre-reduce vs the legacy per-row gather.
+    """Distributed Borůvka phase 1 on forced multi-device CPU meshes.
 
-    Runs in a subprocess (the main bench process must keep one device) and
-    records, per path, wall clock plus the ANALYTIC per-round shuffle
-    footprint: O(c·P) bytes shrinking along the Borůvka halving bound for
-    the pre-reduced path vs a constant O(s·P) for the per-row gather — the
-    gathered bytes scale with component count, not s (DESIGN.md §9)."""
+    Four row families, each from its own subprocess (the main bench process
+    must keep one device; the budgeted children need their own rlimits):
+
+    1. prereduce vs rowgather (flat 4-device mesh): the shuffle-light
+       per-component pre-reduce vs the legacy per-row gather — O(c·P) bytes
+       shrinking along the halving bound vs constant O(s·P) (DESIGN.md §9).
+    2. twotier (pod (2, 2) mesh): the same run with the 'component' reduce
+       tiered — intra-pod pre-reduce, then cross-pod on the per-pod winners
+       only; records the per-tier analytic split (DESIGN.md §15).
+    3. phase1_merge at s >= 256k: the merge SUBSYSTEM in isolation
+       (synthetic_merge_rounds — the O(s²d) candidate sweep replaced by
+       synthetic pair-merge candidates) under a hard RLIMIT_DATA budget.
+       The sharded component-graph merge runs inside the budget; the
+       replicated point-level twin is launched under the SAME budget and
+       its failure is recorded on the row — the headline "the replicated
+       merge cannot run at this s" is demonstrated, not asserted.
+    4. reservoir_finalize: the streaming reservoir on the 4-device mesh,
+       with the owner-scatter finalize's analytic bytes vs the legacy
+       whole-payload gather (cluster.reservoir_finalize_bytes).
+    """
     import subprocess
     import sys
     import textwrap
 
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    env.setdefault("PYTHONPATH", "src")
+
+    def run_child(code: str, timeout: int = 3600):
+        out = subprocess.run(
+            [sys.executable, "-c", code], capture_output=True, text=True,
+            timeout=timeout, env=env,
+        )
+        got = {}
+        for line in out.stdout.splitlines():
+            if line.startswith("RESULT "):
+                _, name, *kvs = line.split()
+                got[name] = dict(kv.split("=", 1) for kv in kvs)
+        return out, got
+
+    # --- 1+2: full phase 1, flat vs pod mesh -------------------------------
     # d kept small on purpose: the O(s^2 d) candidate sweep is IDENTICAL in
-    # both paths, and at large d it drowns the shuffle+merge delta this row
-    # exists to measure
+    # all paths, and at large d it drowns the shuffle+merge delta these rows
+    # exist to measure
     s, d = (2048, 128) if SMALL else (16384, 64)
     child = textwrap.dedent(f"""
         import os
@@ -464,46 +494,50 @@ def phase1_distributed():
         import jax, jax.numpy as jnp, numpy as np
         from repro.common import l2_normalize
         from repro.distrib.hac_parallel import (
-            boruvka_mst_distributed, shuffle_bytes_per_round)
-        from repro.distrib.sharding import make_flat_mesh
+            boruvka_mst_distributed, shuffle_bytes_per_round,
+            shuffle_bytes_per_tier)
+        from repro.distrib.sharding import make_flat_mesh, make_pod_mesh
 
         s, d, P = {s}, {d}, 4
-        mesh = make_flat_mesh(P)
         rng = np.random.default_rng(5)
         xs = l2_normalize(jnp.asarray(
             rng.normal(size=(s, d)).astype(np.float32)))
-        for pre in (True, False):
-            e = boruvka_mst_distributed(mesh, ("data",), xs, pre_reduce=pre)
+        legs = (
+            ("prereduce", make_flat_mesh(P), ("data",), True),
+            ("rowgather", make_flat_mesh(P), ("data",), False),
+            ("twotier", make_pod_mesh(2, 2), ("pod", "data"), True),
+        )
+        for name, mesh, axes, pre in legs:
+            # compact=False keeps the (s,)-slot edge layout so the round
+            # count stays derivable from the edge array length
+            kw = dict(pre_reduce=pre, compact=False)
+            e = boruvka_mst_distributed(mesh, axes, xs, **kw)
             jax.block_until_ready(e.u)  # warmup & compile
             us = float("inf")  # best-of-3: the host-chained loop is jittery
             for _ in range(3):
                 t0 = time.perf_counter()
-                e = boruvka_mst_distributed(mesh, ("data",), xs, pre_reduce=pre)
+                e = boruvka_mst_distributed(mesh, axes, xs, **kw)
                 jax.block_until_ready(e.u)
                 us = min(us, (time.perf_counter() - t0) * 1e6)
             rounds = e.u.shape[0] // s
             per_round = shuffle_bytes_per_round(s, P, rounds, pre_reduce=pre)
-            name = "prereduce" if pre else "rowgather"
+            tiers = tuple(mesh.shape[a] for a in axes)
+            tiered = shuffle_bytes_per_tier(s, tiers, rounds)
             print(f"RESULT {{name}} us={{us:.1f}} rounds={{rounds}}"
                   f" shuffle_bytes={{sum(per_round)}}"
-                  f" per_round={{'|'.join(str(b) for b in per_round)}}")
+                  f" per_round={{'|'.join(str(b) for b in per_round)}}"
+                  f" intra={{sum(tiered['intra'])}}"
+                  f" cross={{sum(tiered['cross'])}}")
     """)
-    env = dict(os.environ, JAX_PLATFORMS="cpu")
-    env.setdefault("PYTHONPATH", "src")
-    out = subprocess.run(
-        [sys.executable, "-c", child], capture_output=True, text=True,
-        timeout=3600, env=env,
-    )
-    if out.returncode != 0:
+    out, got = run_child(child)
+    if out.returncode != 0 or not {"prereduce", "rowgather", "twotier"} <= set(
+        got
+    ):
         print(f"# phase1_distributed: subprocess failed\n{out.stderr}")
         return
-    got = {}
-    for line in out.stdout.splitlines():
-        if line.startswith("RESULT "):
-            _, name, *kvs = line.split()
-            got[name] = dict(kv.split("=", 1) for kv in kvs)
-    pre, leg = got["prereduce"], got["rowgather"]
+    pre, leg, two = got["prereduce"], got["rowgather"], got["twotier"]
     pre_us, leg_us = float(pre["us"]), float(leg["us"])
+    two_us = float(two["us"])
     row(f"phase1_distributed_prereduce_s{s}_d{d}_P4", pre_us,
         f"rounds={pre['rounds']};shuffle_bytes={pre['shuffle_bytes']};"
         f"shuffle_bytes_per_round={pre['per_round']};"
@@ -513,6 +547,124 @@ def phase1_distributed():
         f"shuffle_bytes_per_round={leg['per_round']};"
         f"shuffle_reduction="
         f"{float(leg['shuffle_bytes']) / max(float(pre['shuffle_bytes']), 1):.1f}x")
+    row(f"phase1_distributed_twotier_s{s}_d{d}_P2x2", two_us,
+        f"rounds={two['rounds']};"
+        f"shuffle_bytes_intra={two['intra']};"
+        f"shuffle_bytes_cross={two['cross']};"
+        f"flat_cross_bytes={pre['shuffle_bytes']};"
+        f"cross_reduction="
+        f"{float(pre['shuffle_bytes']) / max(float(two['cross']), 1):.1f}x")
+
+    # --- 3: merge subsystem at s >= 256k under a memory budget -------------
+    # budgets calibrated so the sharded component-graph merge fits with ~2x
+    # headroom while the replicated (s,)-slot history alone exceeds the cap
+    # (measured: comp 418 MB / point >768 MB at s=2^20; comp 772 MB / point
+    # 3.3 GB unbudgeted at s=2^22)
+    ms, budget_mb = (1 << 20, 768) if SMALL else (1 << 22, 1536)
+
+    def merge_child(merge: str) -> str:
+        return textwrap.dedent(f"""
+            import os, resource, time
+            budget = {budget_mb} * (1 << 20)
+            resource.setrlimit(resource.RLIMIT_DATA, (budget, budget))
+            os.environ["XLA_FLAGS"] = (
+                "--xla_force_host_platform_device_count=4")
+            os.environ.setdefault("JAX_PLATFORMS", "cpu")
+            import jax
+            from repro.distrib.hac_parallel import (
+                synthetic_merge_rounds, shuffle_bytes_per_tier)
+            from repro.distrib.sharding import make_pod_mesh, tier_sizes
+
+            s = {ms}
+            mesh = make_pod_mesh(2, 2)
+            axes = ("pod", "data")
+            t0 = time.perf_counter()
+            e, rounds = synthetic_merge_rounds(
+                mesh, axes, s, merge="{merge}")
+            jax.block_until_ready(e.u)
+            us = (time.perf_counter() - t0) * 1e6
+            peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+            tiered = shuffle_bytes_per_tier(
+                s, tier_sizes(mesh, axes), rounds, merge="{merge}")
+            print(f"RESULT {merge} us={{us:.1f}} rounds={{rounds}}"
+                  f" peak_rss_mb={{peak:.1f}}"
+                  f" intra={{sum(tiered['intra'])}}"
+                  f" cross={{sum(tiered['cross'])}}")
+        """)
+
+    out_c, got_c = run_child(merge_child("comp"))
+    if out_c.returncode != 0 or "comp" not in got_c:
+        print(f"# phase1_distributed: sharded merge child failed\n"
+              f"{out_c.stderr}")
+        return
+    # the replicated twin under the SAME budget: any failure shape (python
+    # MemoryError, XLA RESOURCE_EXHAUSTED, hard abort) counts as cannot-run
+    try:
+        out_p, got_p = run_child(merge_child("point"))
+        replicated = (
+            f"ran_us={float(got_p['point']['us']):.1f}"
+            if out_p.returncode == 0 and "point" in got_p
+            else "oom_under_budget"
+        )
+    except subprocess.TimeoutExpired:
+        replicated = "timeout_under_budget"
+    if replicated != "oom_under_budget":
+        print(f"# phase1_merge: replicated path unexpectedly survived the"
+              f" {budget_mb} MB budget at s={ms} ({replicated})")
+    c = got_c["comp"]
+    row(f"phase1_merge_sharded_s{ms}_P2x2", float(c["us"]),
+        f"rounds={c['rounds']};budget_mb={budget_mb};"
+        f"peak_rss_mb={c['peak_rss_mb']};"
+        f"shuffle_bytes_intra={c['intra']};"
+        f"shuffle_bytes_cross={c['cross']};"
+        f"replicated={replicated}")
+
+    # --- 4: reservoir finalize on the 4-device mesh ------------------------
+    rn, rd, rchunks, rs = (
+        (16_384, 256, 4, 1024) if SMALL else (65_536, 512, 8, 4096)
+    )
+    child = textwrap.dedent(f"""
+        import os, time
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import jax, numpy as np
+        from repro.distrib.cluster import reservoir_sample_distributed_stream
+        from repro.distrib.sharding import make_flat_mesh
+        from repro.text.stream import CorpusStream
+
+        n, d, chunk, s, P = {rn}, {rd}, {rn // rchunks}, {rs}, 4
+        mesh = make_flat_mesh(P)
+
+        def blocks():
+            for ci in range(n // chunk):
+                rng = np.random.default_rng(2000 + ci)
+                yield rng.standard_normal((chunk, d)).astype(np.float32)
+
+        stream = CorpusStream.from_blocks(blocks, n=n, dim=d, chunk=chunk)
+        key = jax.random.PRNGKey(7)
+        rows_out, _ = reservoir_sample_distributed_stream(
+            mesh, ("data",), stream, s, key)
+        jax.block_until_ready(rows_out)  # warmup & compile
+        us = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            rows_out, _ = reservoir_sample_distributed_stream(
+                mesh, ("data",), stream, s, key)
+            jax.block_until_ready(rows_out)
+            us = min(us, (time.perf_counter() - t0) * 1e6)
+        print(f"RESULT reservoir us={{us:.1f}}")
+    """)
+    out, got = run_child(child)
+    if out.returncode != 0 or "reservoir" not in got:
+        print(f"# phase1_distributed: reservoir child failed\n{out.stderr}")
+        return
+    from repro.distrib.cluster import reservoir_finalize_bytes
+
+    fin = reservoir_finalize_bytes(rs, rd, 4, owner_scatter=True)
+    fin_legacy = reservoir_finalize_bytes(rs, rd, 4, owner_scatter=False)
+    row(f"reservoir_finalize_s{rs}_d{rd}_P4", float(got["reservoir"]["us"]),
+        f"finalize_bytes={fin};finalize_bytes_legacy={fin_legacy};"
+        f"finalize_reduction={fin_legacy / max(fin, 1):.1f}x")
 
 
 def stream_oocore():

@@ -248,6 +248,106 @@ def _merge_round_pre(
     return _align_merge(labels, eu, ev, ew, propose)
 
 
+@functools.partial(jax.jit, static_argnames=("next_cap",))
+def _merge_round_comp(
+    best_w: jax.Array,  # (cap,) pre-reduced best weight per dense component
+    best_row: jax.Array,  # (cap,) winning global row id per dense component
+    best_j: jax.Array,  # (cap,) winning col per dense component (-1 if none)
+    best_tcomp: jax.Array,  # (cap,) dense component id of the winning col
+    comp_to_root: jax.Array,  # (cap,) dense component id -> root point id
+    n_real: jax.Array,  # () real component count entering the round (<= cap)
+    *,
+    next_cap: int,  # halving bound entering the NEXT round
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array, jax.Array,
+           jax.Array]:
+    """Component-graph Borůvka alignment — the pod-scale merge entry point.
+
+    ``_merge_round_pre`` still walks POINT-level state: an O(s) scatter into
+    point-id slots plus label propagation over s nodes, replicated every
+    round. This variant never touches an (s,) array: the proposal graph has
+    one node per DENSE component, so dedupe + propagation + densify all run
+    on (cap,) arrays with cap following the Borůvka halving bound. Point
+    labels are updated afterwards by a single shard-local gather through the
+    returned ``relabel`` map (distrib/hac_parallel), so per-device label
+    state stays O(s/P) and only c-sized arrays ever cross the wire.
+
+    Parity: old dense ids are root-point-id ranks (cumsum order), so the
+    min-OLD-DENSE-id group representative IS the min-root-point-id
+    representative `_align_merge` picks, the mutual-edge dedupe compares the
+    same point-level endpoints, and the re-densified ids keep root order —
+    expanded through `_expand_round_edges` the forest is bit-identical to
+    the point-level path.
+
+    The halving bound usually exceeds the live component count, so slots
+    [n_real, cap) are PHANTOM ids: their segments are empty (the reduce
+    emits (NEG, BIG_I, -1) — no proposal), they stay isolated singletons
+    through the merge, and because every real id is smaller than every
+    phantom id the cumsum densify ranks real roots first — real new ids are
+    exactly the ids `_round_prep` would assign. ``n_real`` threads the live
+    count through so termination never mistakes phantoms for components.
+
+    Returns (relabel (cap,) old dense -> new dense id, new_comp_to_root
+    (next_cap,), eu, ev, ew, evalid (cap,) compact edge slots indexed by OLD
+    dense id, n_real scalar LIVE component count after the merge).
+    """
+    cap = best_w.shape[0]
+    u = jnp.arange(cap, dtype=jnp.int32)
+    propose = best_j >= 0
+    target = jnp.where(propose, best_tcomp, u)
+
+    # mutual dedupe on the POINT-level endpoints, same rule as _align_merge:
+    # if the target proposes back the same undirected edge, the higher old
+    # dense id (== higher root point id — dense ids are root ranks) drops.
+    t_eu = best_row[target]
+    t_ev = best_j[target]
+    mutual_same = jnp.logical_and(t_eu == best_j, t_ev == best_row)
+    drop = jnp.logical_and(
+        jnp.logical_and(propose, propose[target]),
+        jnp.logical_and(mutual_same, u > target),
+    )
+    evalid = jnp.logical_and(propose, ~drop)
+
+    eu = jnp.where(propose, best_row, 0).astype(jnp.int32)
+    ev = jnp.where(propose, jnp.maximum(best_j, 0), 0).astype(jnp.int32)
+    ew = jnp.where(propose, best_w, NEG)
+
+    # merge + densify on the COMPONENT graph (cap nodes, not s)
+    group = components_from_edges(cap, u, target, propose)  # min old dense id
+    is_root = group == u
+    dense = jnp.cumsum(is_root.astype(jnp.int32)) - 1  # rank of each new root
+    relabel = dense[group]
+    new_root = jnp.zeros((next_cap,), jnp.int32).at[
+        jnp.where(is_root, dense, next_cap)
+    ].set(comp_to_root, mode="drop")
+    n_real_new = jnp.sum(jnp.logical_and(is_root, u < n_real)).astype(
+        jnp.int32
+    )
+    return relabel, new_root, eu, ev, ew, evalid, n_real_new
+
+
+@jax.jit
+def _expand_round_edges(
+    slots: jax.Array,  # (s,) template fixing the expanded slot count
+    eu: jax.Array,  # (cap,) compact edge slots, indexed by dense comp id
+    ev: jax.Array,
+    ew: jax.Array,
+    evalid: jax.Array,
+    comp_to_root: jax.Array,  # (cap,) dense comp id -> root point id
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Scatter one round's compact (cap,) edges into the (s,) point-id slot
+    layout `_merge_round_pre` emits — the bit-parity bridge between the
+    component-level and point-level merge paths (tests + cut compatibility).
+    """
+    s = slots.shape[0]
+    propose = ew > NEG
+    slot = jnp.where(propose, comp_to_root, s)
+    eu_s = jnp.zeros((s,), jnp.int32).at[slot].set(eu, mode="drop")
+    ev_s = jnp.zeros((s,), jnp.int32).at[slot].set(ev, mode="drop")
+    ew_s = jnp.full((s,), NEG, jnp.float32).at[slot].set(ew, mode="drop")
+    valid_s = jnp.zeros((s,), bool).at[slot].set(evalid, mode="drop")
+    return eu_s, ev_s, ew_s, valid_s
+
+
 @functools.partial(jax.jit, static_argnames=("cap",))
 def _round_prep(
     labels: jax.Array, cap: int

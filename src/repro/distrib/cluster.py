@@ -851,6 +851,24 @@ def buckshot_distributed(
 # ------------------------------------------------------- streaming Buckshot
 
 
+def reservoir_finalize_bytes(
+    s: int, d: int, n_shards: int, *, owner_scatter: bool = True
+) -> int:
+    """Analytic wire bytes of the reservoir's finalize collective.
+
+    owner_scatter (the shipped path): the (P·s,) f32 score vector is
+    gathered whole (every device must rank identically), then the s winning
+    payload rows — (d,) f32 row + i32 gidx each — move once from their owner
+    shards. Legacy whole-payload gather: all P per-shard top-s candidate
+    sets crossed the wire, rows included, before ranking. The gate in
+    tools/bench_diff.py holds the bench-recorded value on this model:
+    O(P·s + s·d) vs O(P·s·d)."""
+    score_bytes = n_shards * s * 4
+    if owner_scatter:
+        return score_bytes + s * (d * 4 + 4)
+    return score_bytes + n_shards * s * (d * 4 + 4)
+
+
 def reservoir_sample_distributed_stream(
     mesh: Mesh,
     axes: tuple[str, ...],
@@ -870,11 +888,14 @@ def reservoir_sample_distributed_stream(
     -1 and lose to every real uniform) and emits its local top-s (score,
     global index, row) candidates; the fold carry keeps each shard's running
     top-s LOCALLY (top-s is a monoid — core/sampling.merge_top_s's argument,
-    here across chunks AND shards), and the gather-finalize takes the global
-    top-s once at the end of the pass. Global top-s of iid uniforms is an
-    exact uniform s-subset; the carry holds the rows themselves, so nothing
-    revisits the stream. O(s·d) carry per shard, one O(P·s·d) collective per
-    pass.
+    here across chunks AND shards), and the owner-scatter finalize picks the
+    global top-s once at the end of the pass: ONE gather of the P·s SCORES
+    ranks the winners identically on every device, then each owner shard
+    contributes just its s winning rows (engine.FoldJob). Global top-s of
+    iid uniforms is an exact uniform s-subset; the carry holds the rows
+    themselves, so nothing revisits the stream. O(s·d) carry per shard; the
+    finalize moves O(P·s + s·d) bytes instead of the O(P·s·d) whole-payload
+    gather it replaced (``reservoir_finalize_bytes``).
 
     Returns (rows (s, d) replicated, global indices (s,) np.int32), in
     descending-score order — a uniformly shuffled order."""
@@ -976,7 +997,8 @@ def buckshot_distributed_stream(
     out-of-core distributed matrix.
 
     Phase 1's s = √(kn) sample comes from the sharded one-pass streaming
-    reservoir (fold-mode 'topk' — one gather for the whole sampling pass),
+    reservoir (fold-mode 'topk' — one owner-scatter finalize for the whole
+    sampling pass: scores gathered, winning rows moved once),
     the sample HAC runs matrix-free on the replicated O(s·d) rows
     (``_phase1_init_centers``), and phase 2 rides the streaming distributed
     K-Means fold (chunks sharded on arrival, k·d across the wire once per

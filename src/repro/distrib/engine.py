@@ -11,7 +11,12 @@ per-output reduction kind (the shuffle+reduce):
                             is a {'w', 'row', 'col'} dict of per-shard
                             per-component winners; three pmax/pmin passes pick
                             the global (w desc, row asc) winner per segment —
-                            O(#components) wire traffic, never O(rows)
+                            O(#components) wire traffic, never O(rows). On a
+                            multi-axis (pod, data) mesh the passes run per
+                            tier, innermost first: intra-pod links resolve
+                            each pod's winner before the c-sized per-pod
+                            winners cross pods (bit-identical to the flat
+                            reduce; see _component_reduce).
 
 Reduce kinds may sit at any PREFIX of the output pytree (a single kind can
 cover a whole subtree — 'component' relies on this to see its w/row/col
@@ -47,14 +52,23 @@ def _component_reduce(v: dict, axes) -> dict:
     shards, so after the (w, row) fold the winner is unique and its col
     follows by one more pmin — three O(#components) collectives replace the
     O(rows) per-row candidate gather.
+
+    The fold runs PER MESH AXIS, innermost first: on a (pod, data) mesh the
+    'data' tier resolves each pod's winner over the fast intra-pod links,
+    and only then do the c-sized per-pod winners cross pods. Because the
+    (w desc, row asc) order is total (rows globally unique) the sequential
+    per-axis fold is bit-identical to the joint reduce over all axes — the
+    tiering changes where the bytes flow, not the answer.
     """
     big_i = jnp.iinfo(jnp.int32).max
-    w = jax.lax.pmax(v["w"], axes)
-    on_max = v["w"] == w
-    row = jax.lax.pmin(jnp.where(on_max, v["row"], big_i), axes)
-    mine = jnp.logical_and(on_max, v["row"] == row)
-    col = jax.lax.pmin(jnp.where(mine, v["col"], big_i), axes)
-    return {"w": w, "row": row, "col": jnp.where(col == big_i, -1, col)}
+    for ax in reversed(axes):  # innermost axis = intra-pod tier goes first
+        w = jax.lax.pmax(v["w"], ax)
+        on_max = v["w"] == w
+        row = jax.lax.pmin(jnp.where(on_max, v["row"], big_i), ax)
+        mine = jnp.logical_and(on_max, v["row"] == row)
+        col = jax.lax.pmin(jnp.where(mine, v["col"], big_i), ax)
+        v = {"w": w, "row": row, "col": jnp.where(col == big_i, -1, col)}
+    return v
 
 
 _REDUCERS: dict[str, Callable[[Any, Any], Any]] = {
@@ -171,6 +185,33 @@ def _topk_merge(a: dict, b: dict) -> dict:
     )
 
 
+def _component_merge(a: dict, b: dict) -> dict:
+    """Chunk monoid of the 'component' fold kind: per-segment lexicographic
+    best of two {'w','row','col'} winner sets, (w desc, row asc). Global row
+    ids are unique, so the order is total and the merge associative — the
+    per-shard carry holds the running winner locally and finalize reuses the
+    tiered `_component_reduce` as its single collective pass.
+    """
+    take_b = jnp.logical_or(
+        b["w"] > a["w"],
+        jnp.logical_and(b["w"] == a["w"], b["row"] < a["row"]),
+    )
+    return jax.tree_util.tree_map(
+        lambda av, bv: jnp.where(take_b, bv, av), a, b
+    )
+
+
+def _check_component(subtree: Any) -> None:
+    if not (
+        isinstance(subtree, dict) and set(subtree) == {"w", "row", "col"}
+    ):
+        raise ValueError(
+            "'component' fold kind expects a {'w','row','col'} dict subtree"
+            " of per-segment winners (ops.component_best_edge layout), got"
+            f" {type(subtree).__name__}"
+        )
+
+
 def _check_topk(subtree: Any) -> None:
     if not (isinstance(subtree, dict) and "score" in subtree):
         raise ValueError(
@@ -209,16 +250,24 @@ class FoldJob:
     This is the paper's combiner discipline lifted across chunks: a mapper
     folds every split it is handed before anything shuffles, so the wire cost
     of an entire multi-chunk pass equals that of one resident job. Fold mode
-    supports 'sum' | 'min' | 'max' | 'topk' (+ 'shard' passthrough); 'gather'
-    and 'component' have no chunk-monoid form.
+    supports 'sum' | 'min' | 'max' | 'topk' | 'component' (+ 'shard'
+    passthrough); only 'gather' has no chunk-monoid form.
+
+    'component' carries each shard's running per-segment best edge (the
+    (w desc, row asc) winner of a {'w','row','col'} subtree — a total order
+    since rows are globally unique, hence a monoid) and finalizes with the
+    same tiered `_component_reduce` the one-shot job uses, so streaming
+    drivers get the hierarchical intra-pod/cross-pod reduce for free.
 
     'topk' is the running-reservoir kind: the subtree must be a dict with a
     'score' leaf of fixed size s (plus payload leaves aligned on axis 0 —
     e.g. global row indices and the rows themselves). Each chunk the map
     emits s candidates per shard; the carry keeps the shard's running top-s
-    LOCALLY (top-s is a monoid), and finalize all-gathers the P per-shard
-    top-s sets and takes the global top-s — ONE gather for the whole pass,
-    O(P·s) wire instead of O(n). This is how the distributed Buckshot sample
+    LOCALLY (top-s is a monoid), and finalize owner-scatters: ONE gather of
+    the P·s SCORES ranks the winners identically everywhere, then each owner
+    shard psum-contributes just its s winning payload rows — O(P·s + s·d)
+    wire instead of the O(P·s·d) whole-payload gather, still one collective
+    pass for the whole stream. This is how the distributed Buckshot sample
     reservoir rides fold mode (distrib/cluster).
 
     The carry is a tuple of (P, ...) arrays sharded over ``axes`` — shard p's
@@ -237,12 +286,16 @@ class FoldJob:
     ):
         flat_kinds, kinds_def = jax.tree_util.tree_flatten(reduce_kinds)
         bad = sorted(
-            {k for k in flat_kinds if k not in ("shard", "topk", *_MONOID)}
+            {
+                k
+                for k in flat_kinds
+                if k not in ("shard", "topk", "component", *_MONOID)
+            }
         )
         if bad:
             raise ValueError(
-                "fold mode supports sum/min/max/topk/shard reduce kinds,"
-                f" got {bad}"
+                "fold mode supports sum/min/max/topk/component/shard reduce"
+                f" kinds, got {bad}"
             )
         fold_kinds = [k for k in flat_kinds if k != "shard"]
         self.name = name
@@ -267,11 +320,16 @@ class FoldJob:
             for f, k in zip(folds, fold_kinds):
                 if k == "topk":
                     _check_topk(f)
+                elif k == "component":
+                    _check_component(f)
             return tuple(tmap(lambda v: v[None], f) for f in folds), shards
 
         def merge_fold(c, f, k):
             if k == "topk":  # joint merge across the subtree, not leafwise
                 merged = _topk_merge(tmap(lambda cv: cv[0], c), f)
+                return tmap(lambda v: v[None], merged)
+            if k == "component":  # joint: selector reads w/row together
+                merged = _component_merge(tmap(lambda cv: cv[0], c), f)
                 return tmap(lambda v: v[None], merged)
             return tmap(lambda cv, fv, op=_MONOID[k]: op(cv[0], fv)[None], c, f)
 
@@ -283,12 +341,35 @@ class FoldJob:
             )
             return carry, shards
 
+        axis_sizes = tuple(mesh.shape[a] for a in axes)
+
         def topk_finalize(v):
-            # gather-finalize: the P per-shard top-s sets cross the wire once,
-            # then every device takes the same global top-s (replicated).
-            g = tmap(lambda x: jax.lax.all_gather(x, axes, tiled=True), v)
-            _, pos = jax.lax.top_k(g["score"], v["score"].shape[0])
-            return tmap(lambda x: x[pos], g)
+            # owner-scatter finalize: only the (P·s,) SCORE vector is gathered
+            # whole — every device ranks it identically (top_k is
+            # deterministic) and decodes winner -> (owner shard, local slot).
+            # Each owner then contributes exactly its winning payload rows
+            # into a psum, zeros elsewhere: one nonzero addend per output slot
+            # makes the sum an exact move, bit-identical to gathering all
+            # payloads and indexing. Wire: O(P·s) score + O(s·d) payload,
+            # replacing the O(P·s·d) whole-subtree gather.
+            s = v["score"].shape[0]
+            g_score = jax.lax.all_gather(v["score"], axes, tiled=True)
+            top, pos = jax.lax.top_k(g_score, s)
+            owner = pos // s  # all_gather tiles shards in flat axis order
+            local = pos % s
+            me = jnp.int32(0)
+            for ax, size in zip(axes, axis_sizes):
+                me = me * size + jax.lax.axis_index(ax)
+            mine = owner == me
+
+            def collect(x):
+                rows = x[jnp.where(mine, local, 0)]
+                keep = mine.reshape(mine.shape + (1,) * (rows.ndim - 1))
+                return jax.lax.psum(jnp.where(keep, rows, 0), axes)
+
+            out = tmap(collect, v)
+            out["score"] = top  # already exact from the ranked gather
+            return out
 
         def inner_finalize(carry):
             # psum-family collectives accept pytrees, so a subtree reduces whole
@@ -395,5 +476,6 @@ def make_fold_job(
     name: str = "fold",
 ) -> FoldJob:
     """Streaming fold mode: map each chunk, combine monoid partials locally,
-    one collective at the end (see FoldJob)."""
+    one collective at the end (see FoldJob). Supports
+    sum/min/max/topk/component/shard reduce kinds."""
     return FoldJob(mesh, axes, map_combine, reduce_kinds, name=name)

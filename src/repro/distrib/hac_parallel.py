@@ -23,20 +23,31 @@ MXU similarity tiles straight into a per-row (max, argmax). Per round:
             the merge, so only those leave the shard (the paper's combiner
             discipline applied to the edge search, DESIGN.md §9)
   reduce  : the engine's 'component' fold — three O(#components) collectives
-            pick the global (w desc, row asc) winner per component
+            pick the global (w desc, row asc) winner per component, TIERED
+            on a pod mesh: intra-pod links resolve each pod's winner before
+            the c-sized per-pod winners cross pods (DESIGN.md §15)
   merge   : mutual-edge dedupe + label propagation on the pre-reduced
-            winners (core.hac._merge_round_pre) — no replicated lexsort
+            winners. merge='comp' (default) runs the whole alignment on the
+            COMPONENT graph (core.hac._merge_round_comp) — O(cap) dedupe,
+            pointer jumping, and densify, point state touched only through
+            an elementwise relabel gather; merge='point' is the replicated
+            (s,)-slot alignment (core.hac._merge_round_pre), kept for
+            parity and benches
 
 Component ids are DENSIFIED each round and capped by the Borůvka halving
 bound ceil(s / 2^round), so the per-round shuffle SHRINKS geometrically:
-O(s·P) bytes per round under the old per-row gather, O(c·P) now. The
-fully-merged check is computed on device every round but the host syncs on
-it only every ``check_every`` rounds, so rounds keep streaming to the
-device without a per-round host round-trip; a late exit is bounded at
-check_every - 1 no-op rounds and the executed round count is deterministic.
+O(s·P) bytes per round under the old per-row gather, O(c·P) now — split
+per tier by ``shuffle_bytes_per_tier``. The fully-merged check is computed
+on device every round but the host syncs on it only every ``check_every``
+rounds, so rounds keep streaming to the device without a per-round host
+round-trip; a late exit is bounded at check_every - 1 no-op rounds and the
+executed round count is deterministic.
 
 ``pre_reduce=False`` keeps the legacy per-row gather path for benchmarking
-the shuffle win (benchmarks/run.py phase1_distributed rows).
+the shuffle win (benchmarks/run.py phase1_distributed rows), and
+``synthetic_merge_rounds`` isolates the merge subsystem at sample sizes
+where the replicated point-level path exceeds any fixed memory budget
+(benchmarks/run.py phase1_merge rows).
 
 The replicated sample is PADDED to a shard multiple (paper-default s rarely
 divides a 3-device mesh): pad rows carry label -1, which the edge-search
@@ -60,7 +71,9 @@ from jax.sharding import Mesh
 from repro.common import l2_normalize
 from repro.core.hac import (  # noqa: F401  (re-exported: historical home)
     MSTEdges,
+    _expand_round_edges,
     _merge_round,
+    _merge_round_comp,
     _merge_round_pre,
     _round_prep,
     _rounds_for,
@@ -69,7 +82,7 @@ from repro.core.hac import (  # noqa: F401  (re-exported: historical home)
     single_link_labels_boruvka,
 )
 from repro.distrib.engine import make_job
-from repro.distrib.sharding import mesh_axis_size
+from repro.distrib.sharding import mesh_axis_size, tier_sizes
 from repro.kernels import ops
 from repro.kernels.ref import BIG_I as _BIG_I
 
@@ -85,9 +98,22 @@ def round_cap(s: int, r: int) -> int:
 
 
 @functools.lru_cache(maxsize=None)
-def _cand_job(mesh: Mesh, axes: tuple[str, ...], impl: str, pre_reduce: bool):
-    """Cached per-(mesh, axes, impl, mode) candidate job: host-chained rounds
-    re-enter the same jitted shard_map instead of re-tracing per call."""
+def _cand_job(
+    mesh: Mesh, tiers: tuple[int, ...], axes: tuple[str, ...], impl: str,
+    mode: str,
+):
+    """Cached per-(mesh, tiers, axes, impl, mode) candidate job: host-chained
+    rounds re-enter the same jitted shard_map instead of re-tracing per call.
+
+    ``tiers`` (sharding.tier_sizes) is the explicit tier topology — a mesh
+    reshaped over the same devices (flat (8,) -> pod (2, 4)) lowers DIFFERENT
+    collectives for the tiered 'component' reduce, so the topology must be
+    part of the cache identity rather than an implicit property of the Mesh
+    hash. Modes: 'comp' (dense component ids end-to-end, compact merge),
+    'pre' (point labels + per-component pre-reduce), 'rowgather' (legacy
+    per-row gather).
+    """
+    del tiers  # cache-key only: derived from (mesh, axes), pinned explicitly
 
     def cand_map(data, bcast):
         bj, bw = ops.sim_best_edge(
@@ -122,14 +148,69 @@ def _cand_job(mesh: Mesh, axes: tuple[str, ...], impl: str, pre_reduce: bool):
             )
         return {"best": {"w": w, "row": row, "col": col}}
 
-    if pre_reduce:
+    def cand_map_comp(data, bcast):
+        # dense comp ids double as the masking labels: they induce the same
+        # same-component partition as min-id point labels, so the edge search
+        # is unchanged — but no point-label array exists anywhere. Pad rows
+        # carry comp == -1 (kernels mask them out of the map itself); the
+        # segmented reduce needs them redirected to the dropped segment cap
+        # instead (negative segment ids are unsafe in XLA segment/scatter
+        # ops).
+        comp = data["comp"]
+        bj, bw = ops.sim_best_edge(
+            data["rows"], bcast["xs"], comp, bcast["comp_all"], impl=impl,
+        )
+        bj = bj.astype(jnp.int32)
+        cap = bcast["comp_to_root"].shape[0]
+        s = bcast["xs"].shape[0]
+        seg = jnp.where(comp < 0, cap, comp)
+        if cap == s:
+            neg = float(jnp.finfo(jnp.float32).min)
+            w = jnp.full((cap,), neg, jnp.float32).at[seg].set(
+                bw, mode="drop")
+            row = jnp.full((cap,), _BIG_I, jnp.int32).at[seg].set(
+                data["rowid"], mode="drop")
+            col = jnp.full((cap,), -1, jnp.int32).at[seg].set(
+                bj, mode="drop")
+        else:
+            w, row, col = ops.component_best_edge(
+                bw, bj, data["rowid"], seg, cap, impl=impl,
+            )
+        return {"best": {"w": w, "row": row, "col": col}}
+
+    if mode == "comp":
+        return make_job(
+            mesh, axes, cand_map_comp, {"best": "component"},
+            name="boruvka_cand_compid",
+        )
+    if mode == "pre":
         return make_job(
             mesh, axes, cand_map_pre, {"best": "component"},
             name="boruvka_cand_comp",
         )
+    if mode != "rowgather":
+        raise ValueError(f"unknown candidate-job mode {mode!r}")
     return make_job(
         mesh, axes, cand_map, {"j": "shard", "w": "shard"},
         name="boruvka_cand",
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _relabel_job(mesh: Mesh, tiers: tuple[int, ...], axes: tuple[str, ...]):
+    """Shard-local component relabel after a comp-mode merge: each device
+    gathers its O(s/P) comp slice through the c-sized ``relabel`` broadcast.
+    Only the (cap,) relabel map crosses the wire — per-device label state
+    never leaves O(s/P), which is the whole point of the sharded merge."""
+    del tiers  # cache-key only (see _cand_job)
+
+    def relabel_map(data, bcast):
+        comp = data["comp"]
+        new = bcast["relabel"][jnp.maximum(comp, 0)]
+        return {"comp": jnp.where(comp < 0, -1, new)}
+
+    return make_job(
+        mesh, axes, relabel_map, {"comp": "shard"}, name="comp_relabel"
     )
 
 
@@ -242,7 +323,9 @@ def _cancel_pending(slots: list["_WarmSlot"]) -> None:
                 del _WARM[slot.key]
 
 
-def _round_structs(mesh, axes, s: int, d: int, pad: int, cap: int):
+def _round_structs(
+    mesh, axes, s: int, d: int, pad: int, cap: int, mode: str = "pre"
+):
     """Abstract (data, bcast) arguments of one round's candidate job, with
     EXPLICIT shardings (rows sharded over ``axes``, broadcast replicated) —
     both the AOT lowering and the per-round ``device_put`` placement use
@@ -260,6 +343,18 @@ def _round_structs(mesh, axes, s: int, d: int, pad: int, cap: int):
             shape, dtype, sharding=NamedSharding(mesh, spec)
         )
 
+    if mode == "comp":
+        data = {
+            "rows": sd((s + pad, d), f32, True),
+            "rowid": sd((s + pad,), i32, True),
+            "comp": sd((s + pad,), i32, True),
+        }
+        bcast = {
+            "xs": sd((s, d), f32, False),
+            "comp_all": sd((s,), i32, False),
+            "comp_to_root": sd((cap,), i32, False),
+        }
+        return data, bcast
     data = {
         "rows": sd((s + pad, d), f32, True),
         "labels": sd((s + pad,), i32, True),
@@ -294,7 +389,7 @@ def _place_round_args(mesh, axes, data: dict, bcast: dict):
 
 
 def _compile_candidate_round(
-    job, mesh, axes, s: int, d: int, pad: int, cap: int
+    job, mesh, axes, s: int, d: int, pad: int, cap: int, mode: str = "pre"
 ):
     """AOT-compile the pre-reduce candidate job for one round's shapes.
 
@@ -302,7 +397,7 @@ def _compile_candidate_round(
     round-trip it — the round loop then falls back to the plain jitted call,
     which compiles synchronously exactly as before the pre-warm existed."""
     try:
-        data, bcast = _round_structs(mesh, axes, s, d, pad, cap)
+        data, bcast = _round_structs(mesh, axes, s, d, pad, cap, mode)
         return job.lower(data, bcast).compile()
     except Exception:  # pragma: no cover — backend-specific AOT gaps
         return None
@@ -317,19 +412,26 @@ def prewarm_candidate_rounds(
     d: int,
     pad: int,
     rounds: int,
+    mode: str = "comp",
 ) -> list[_WarmSlot]:
     """Kick off background compilation of the candidate-job round shapes
     (the ROADMAP 'pre-warm the round shapes asynchronously' item): one
     daemon worker compiles them in ROUND ORDER. Returns one slot per round;
-    ``slot.result()`` blocks only until THAT round's compile lands."""
-    job = _cand_job(mesh, axes, impl, True)
+    ``slot.result()`` blocks only until THAT round's compile lands.
+
+    Cache keys carry the explicit tier topology (``sharding.tier_sizes``)
+    alongside the Mesh: a reshape of the same devices into a different
+    pod layout lowers different collectives, and a stale flat-mesh
+    executable must never serve a pod-mesh call (or vice versa)."""
+    tiers = tier_sizes(mesh, axes)
+    job = _cand_job(mesh, tiers, axes, impl, mode)
     slots = []
     todo = []
     with _WARM_LOCK:
         keys = set()
         for r in range(rounds):
             cap = round_cap(s, r)
-            key = (mesh, axes, impl, s, d, pad, cap)
+            key = (mesh, tiers, axes, impl, mode, s, d, pad, cap)
             keys.add(key)
             slot = _WARM.get(key)
             if slot is None:
@@ -349,7 +451,7 @@ def prewarm_candidate_rounds(
                         slot.started = True
                     try:
                         slot.value = _compile_candidate_round(
-                            job, mesh, axes, s, d, pad, cap
+                            job, mesh, axes, s, d, pad, cap, mode
                         )
                     finally:
                         slot._ev.set()
@@ -381,6 +483,42 @@ def shuffle_bytes_per_round(
     return [n_shards * s * 8 for _ in range(rounds)]
 
 
+def shuffle_bytes_per_tier(
+    s: int, tiers: tuple[int, ...], rounds: int, *, merge: str = "comp"
+) -> dict[str, list[int]]:
+    """Analytic per-round shuffle footprint of the tiered candidate exchange.
+
+    ``tiers`` is sharding.tier_sizes output, outermost first — (n_pods,
+    pod_size) on a pod mesh, (P,) on a flat one. Per round the 'component'
+    reduce moves one (w f32, row i32, col i32) triple per component per
+    participating shard, per tier:
+
+      intra: within each pod, pod_size shards exchange cap-sized triples
+             over the fast links — n_pods · pod_size · cap · 12 bytes.
+      cross: only the per-pod winners cross pods — n_pods · cap · 12 bytes.
+
+    A flat mesh has no intra tier (zeros) and all P shards on the cross
+    tier — the pod layout's headline is the cross-tier column shrinking
+    from P·cap·12 to n_pods·cap·12. merge='comp' additionally broadcasts
+    the (cap,) relabel map back to the shards each round (cross tier,
+    4 bytes per entry); merge='point' rebuilds point labels replicated
+    instead (no per-shard relabel traffic, but O(s) state per device).
+    """
+    if len(tiers) == 1:
+        intra_shards = 0  # single tier: everything is the cross exchange
+        cross_shards = tiers[0]
+    else:
+        intra_shards = int(math.prod(tiers))  # every shard, intra-pod links
+        cross_shards = int(math.prod(tiers[:-1]))  # one winner set per pod
+    intra, cross = [], []
+    for r in range(rounds):
+        cap = round_cap(s, r)
+        intra.append(intra_shards * cap * 12)
+        relabel = cap * 4 if merge == "comp" else 0
+        cross.append(cross_shards * cap * 12 + relabel)
+    return {"intra": intra, "cross": cross}
+
+
 def boruvka_mst_distributed(
     mesh: Mesh,
     axes: tuple[str, ...],
@@ -388,6 +526,8 @@ def boruvka_mst_distributed(
     *,
     impl: str = "xla",
     pre_reduce: bool = True,
+    merge: str = "comp",
+    compact: bool = True,
     check_every: int = 3,
     prewarm: bool | None = None,
 ) -> MSTEdges:
@@ -403,6 +543,19 @@ def boruvka_mst_distributed(
     the per-round arrays shrinking along the halving bound. pre_reduce=False
     is the legacy O(s)-per-shard per-row gather, kept for benchmarks.
 
+    merge selects the alignment step (pre_reduce only; the row-gather path
+    always merges at point level):
+      'comp' (default): the merge itself runs on the COMPONENT graph
+        (core.hac._merge_round_comp) — dedupe, pointer jumping, and densify
+        all on (cap,) arrays following the halving bound, point state touched
+        only by an elementwise relabel gather. With ``compact=True`` the
+        returned MSTEdges hold one slot per component per round (total
+        ~2s over a full run instead of s·rounds) — ``cut_mst_edges`` is
+        length-agnostic, and ``compact=False`` re-expands each round into
+        the (s,)-slot layout, bit-identical to merge='point'.
+      'point': the replicated point-level alignment
+        (core.hac._merge_round_pre), kept for parity tests and benches.
+
     prewarm (pre_reduce only) AOT-compiles the round shapes on a background
     worker kicked off before round 1, in round order, so the O(log s)
     per-cap recompiles overlap the round loop instead of serializing inside
@@ -412,39 +565,45 @@ def boruvka_mst_distributed(
     the round execution and the overlap cannot pay). ``prewarm=False`` keeps
     the synchronous-compile behavior for benches.
     """
+    if merge not in ("comp", "point"):
+        raise ValueError(f"merge must be 'comp' or 'point', got {merge!r}")
+    if not pre_reduce:
+        merge = "point"  # row-gather candidates only exist at point level
+    mode = {True: "comp" if merge == "comp" else "pre", False: "rowgather"}[
+        pre_reduce
+    ]
     s, d = xs.shape
     xs = l2_normalize(xs)
     n_shards = mesh_axis_size(mesh, axes)
+    tiers = tier_sizes(mesh, axes)
     pad = (-s) % n_shards
     xs_p = (
         jnp.concatenate([xs, jnp.zeros((pad, d), xs.dtype)]) if pad else xs
     )
     rowid_p = jnp.arange(s + pad, dtype=jnp.int32)
-    job = _cand_job(mesh, axes, impl, pre_reduce)
+    job = _cand_job(mesh, tiers, axes, impl, mode)
 
-    labels = jnp.arange(s, dtype=jnp.int32)
-    pad_labels = jnp.full((pad,), -1, jnp.int32)
     rounds = _rounds_for(s)
     if prewarm is None:
         prewarm = _auto_prewarm()
     warm = None
-    hint_key = (mesh, axes, impl, s, d, pad)
+    hint_key = (mesh, tiers, axes, impl, mode, s, d, pad)
     if pre_reduce and prewarm:
         with _WARM_LOCK:
             hint = _WARM_ROUNDS_HINT.get(hint_key)
         depth = rounds if hint is None else min(rounds, hint + check_every)
         warm = prewarm_candidate_rounds(
-            mesh, axes, impl, s=s, d=d, pad=pad, rounds=depth
+            mesh, axes, impl, s=s, d=d, pad=pad, rounds=depth, mode=mode
         ) + [None] * (rounds - depth)  # beyond the hint: sync-compile lazily
     try:
-        edges = _boruvka_rounds(
-            job, warm, mesh, axes, xs, xs_p, rowid_p, labels, pad_labels,
-            s, pad, rounds, pre_reduce, check_every,
+        edges, rounds_run = _boruvka_rounds(
+            job, warm, mesh, axes, xs, xs_p, rowid_p, s, pad, rounds,
+            mode, compact, check_every,
         )
         if warm is not None:
             with _WARM_LOCK:
                 _WARM_ROUNDS_HINT.pop(hint_key, None)  # re-insert as newest
-                _WARM_ROUNDS_HINT[hint_key] = edges.u.shape[0] // s
+                _WARM_ROUNDS_HINT[hint_key] = rounds_run
                 while len(_WARM_ROUNDS_HINT) > _WARM_CAP:  # keys pin Meshes
                     _WARM_ROUNDS_HINT.pop(next(iter(_WARM_ROUNDS_HINT)))
         return edges
@@ -454,39 +613,79 @@ def boruvka_mst_distributed(
 
 
 def _boruvka_rounds(
-    job, warm, mesh, axes, xs, xs_p, rowid_p, labels, pad_labels,
-    s, pad, rounds, pre_reduce, check_every,
-) -> MSTEdges:
-    """The host-chained round loop of ``boruvka_mst_distributed``."""
+    job, warm, mesh, axes, xs, xs_p, rowid_p, s, pad, rounds,
+    mode, compact, check_every,
+) -> tuple[MSTEdges, int]:
+    """The host-chained round loop of ``boruvka_mst_distributed``.
+
+    Returns (edges, rounds_run) — compact edges make the round count
+    unrecoverable from the edge array length, so it is explicit.
+    """
+    labels = jnp.arange(s, dtype=jnp.int32)
+    pad_labels = jnp.full((pad,), -1, jnp.int32)
+    # comp-mode state: dense component ids replace point labels end-to-end.
+    # The replicated (s,) comp_all survives ONLY as the candidate sweep's
+    # column-label broadcast (the O(s·d) sweep already replicates xs); the
+    # merge itself never builds point-level state.
+    comp_all = jnp.arange(s, dtype=jnp.int32)
+    comp_to_root = jnp.arange(s, dtype=jnp.int32)
+    n_real = jnp.int32(s)
     eus, evs, ews, evalids = [], [], [], []
+    rounds_run = 0
     for r in range(rounds):
-        labels_p = jnp.concatenate([labels, pad_labels]) if pad else labels
-        if pre_reduce:
-            cap = round_cap(s, r)
-            comp, comp_to_root = _round_prep(labels, cap)
+        rounds_run = r + 1
+        cap = round_cap(s, r)
+        # pre-warmed AOT executable for this round's shapes if it landed
+        # (or will land — result() blocks only on THIS round's compile);
+        # None falls back to the jitted call (compiles synchronously).
+        # REPRO_COMPILE_TIMEOUT bounds the wait: a wedged compile worker
+        # degrades to the jit fallback instead of hanging the round loop.
+        slot = warm[r] if warm is not None else None
+        ex = slot.result(_compile_timeout()) if slot is not None else None
+        if mode == "comp":
+            comp_p = (
+                jnp.concatenate([comp_all, jnp.full((pad,), -1, jnp.int32)])
+                if pad else comp_all
+            )
+            data = {"rows": xs_p, "rowid": rowid_p, "comp": comp_p}
+            bcast = {"xs": xs, "comp_all": comp_all,
+                     "comp_to_root": comp_to_root}
+            if ex is not None:
+                data, bcast = _place_round_args(mesh, axes, data, bcast)
+            best = (job if ex is None else ex)(data, bcast)["best"]
+            tcomp = comp_all[jnp.maximum(best["col"], 0)]
+            next_cap = round_cap(s, r + 1)
+            relabel, new_root, eu, ev, ew, evalid, n_real = _merge_round_comp(
+                best["w"], best["row"], best["col"], tcomp, comp_to_root,
+                n_real, next_cap=next_cap,
+            )
+            if not compact:
+                eu, ev, ew, evalid = _expand_round_edges(
+                    comp_all, eu, ev, ew, evalid, comp_to_root
+                )
+            comp_all = relabel[comp_all]
+            comp_to_root = new_root
+            done = n_real == 1
+        elif mode == "pre":
+            labels_p = jnp.concatenate([labels, pad_labels]) if pad else labels
+            comp, comp_to_root_r = _round_prep(labels, cap)
             comp_p = (
                 jnp.concatenate([comp, jnp.full((pad,), cap, jnp.int32)])
                 if pad else comp
             )
-            # pre-warmed AOT executable for this round's shapes if it landed
-            # (or will land — result() blocks only on THIS round's compile);
-            # None falls back to the jitted call (compiles synchronously).
-            # REPRO_COMPILE_TIMEOUT bounds the wait: a wedged compile worker
-            # degrades to the jit fallback instead of hanging the round loop.
-            slot = warm[r] if warm is not None else None
-            ex = slot.result(_compile_timeout()) if slot is not None else None
             data = {"rows": xs_p, "labels": labels_p, "rowid": rowid_p,
                     "comp": comp_p}
             bcast = {"xs": xs, "all_labels": labels,
-                     "comp_to_root": comp_to_root}
+                     "comp_to_root": comp_to_root_r}
             if ex is not None:
                 data, bcast = _place_round_args(mesh, axes, data, bcast)
-            out = (job if ex is None else ex)(data, bcast)
-            best = out["best"]
+            best = (job if ex is None else ex)(data, bcast)["best"]
             labels, eu, ev, ew, evalid = _merge_round_pre(
-                labels, best["w"], best["row"], best["col"], comp_to_root
+                labels, best["w"], best["row"], best["col"], comp_to_root_r
             )
+            done = jnp.all(labels == 0)  # single component: forest complete
         else:
+            labels_p = jnp.concatenate([labels, pad_labels]) if pad else labels
             out = job(
                 {"rows": xs_p, "labels": labels_p},
                 {"xs": xs, "all_labels": labels},
@@ -494,6 +693,7 @@ def _boruvka_rounds(
             bj = jnp.asarray(out["j"])[:s]  # gather + drop pad-row candidates
             bw = jnp.asarray(out["w"])[:s]
             labels, eu, ev, ew, evalid = _merge_round(labels, bw, bj)
+            done = jnp.all(labels == 0)
         eus.append(eu)
         evs.append(ev)
         ews.append(ew)
@@ -505,16 +705,138 @@ def _boruvka_rounds(
         # no-op rounds (cheap merges — evalid stays False — but full candidate
         # sweeps), and the executed round count never depends on dispatch
         # timing, so bench-recorded rounds/shuffle bytes are reproducible.
-        done = jnp.all(labels == 0)  # single component: forest complete
         if (r + 1) % check_every == 0 or r == rounds - 1:
             if bool(done):
                 break
-    return MSTEdges(
+    edges = MSTEdges(
         u=jnp.concatenate(eus),
         v=jnp.concatenate(evs),
         w=jnp.concatenate(ews),
         valid=jnp.concatenate(evalids),
     )
+    return edges, rounds_run
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def _synth_candidates(comp_to_root, n_real, cap: int):
+    """Deterministic per-component best edges for the merge-only driver:
+    live component c proposes to its pair partner c^1 (the last odd one
+    pairs downward), weights a fixed function of the unordered pair so
+    mutual proposals agree — halves the component count every round, the
+    Borůvka worst case for merge work. Dead/phantom slots emit the empty
+    sentinel the real reduce would ((NEG, BIG_I, -1))."""
+    neg = float(jnp.finfo(jnp.float32).min)
+    c = jnp.arange(cap, dtype=jnp.int32)
+    t = c ^ 1
+    t = jnp.where(t >= n_real, c - 1, t)
+    propose = jnp.logical_and(c < n_real, n_real > 1)
+    t = jnp.where(propose, jnp.maximum(t, 0), c)
+    wval = 1.0 - (jnp.minimum(c, t) + 1.0) / (2.0 * (cap + 1.0))
+    w = jnp.where(propose, wval.astype(jnp.float32), neg)
+    row = jnp.where(propose, comp_to_root[c], _BIG_I)
+    col = jnp.where(propose, comp_to_root[t], -1)
+    return w, row, col, t
+
+
+def synthetic_merge_rounds(
+    mesh: Mesh,
+    axes: tuple[str, ...],
+    s: int,
+    *,
+    merge: str = "comp",
+    check_every: int = 3,
+) -> tuple[MSTEdges, int]:
+    """Borůvka MERGE rounds in isolation, on synthetic pair-merge candidates.
+
+    The full phase-1 driver couples the merge to the O(s²·d/P) candidate
+    sweep, so the merge's replication ceiling hides behind compute at any s
+    a test box can sweep. This driver replaces the sweep with
+    ``_synth_candidates`` (same post-reduce contract) and runs ONLY the
+    per-round alignment — the subsystem this PR shards — at sample sizes
+    where the two merge paths separate:
+
+      merge='comp': component-graph alignment. Per-point state is ONE
+        sharded (s/P per device) comp vector updated through the c-sized
+        relabel broadcast (`_relabel_job`); everything else is O(cap).
+        Edge history is compact — Σ cap_r ≈ 2s slots total.
+      merge='point': the replicated `_merge_round_pre` twin — (s,) labels
+        plus O(s) scatter/propagation per round, and an (s,)-slot edge
+        history growing by 13·s bytes per round. At s = 4M that history
+        alone is ~1.2 GB, which is what the bench's memory budget shows
+        failing (benchmarks/run.py phase1_merge rows).
+
+    Both paths see identical candidates, so at sizes where both run the
+    expanded edges match bit-for-bit (tests/test_pod_scale.py).
+
+    Returns (edges, rounds_run).
+    """
+    if merge not in ("comp", "point"):
+        raise ValueError(f"merge must be 'comp' or 'point', got {merge!r}")
+    from repro.distrib.sharding import shard_rows
+
+    rounds = _rounds_for(s)
+    eus, evs, ews, evalids = [], [], [], []
+    rounds_run = 0
+    if merge == "comp":
+        tiers = tier_sizes(mesh, axes)
+        relabel_job = _relabel_job(mesh, tiers, axes)
+        n_shards = mesh_axis_size(mesh, axes)
+        pad = (-s) % n_shards
+        comp_p = shard_rows(
+            mesh, axes,
+            jnp.concatenate([
+                jnp.arange(s, dtype=jnp.int32),
+                jnp.full((pad,), -1, jnp.int32),
+            ]) if pad else jnp.arange(s, dtype=jnp.int32),
+        )
+        comp_to_root = jnp.arange(s, dtype=jnp.int32)
+        n_real = jnp.int32(s)
+        for r in range(rounds):
+            rounds_run = r + 1
+            cap = round_cap(s, r)
+            w, row, col, tcomp = _synth_candidates(comp_to_root, n_real, cap)
+            relabel, comp_to_root, eu, ev, ew, evalid, n_real = (
+                _merge_round_comp(
+                    w, row, col, tcomp, comp_to_root, n_real,
+                    next_cap=round_cap(s, r + 1),
+                )
+            )
+            comp_p = relabel_job({"comp": comp_p}, {"relabel": relabel})[
+                "comp"
+            ]
+            eus.append(eu)
+            evs.append(ev)
+            ews.append(ew)
+            evalids.append(evalid)
+            if (r + 1) % check_every == 0 or r == rounds - 1:
+                if bool(n_real == 1):
+                    break
+    else:
+        labels = jnp.arange(s, dtype=jnp.int32)
+        rows = jnp.arange(s, dtype=jnp.int32)
+        for r in range(rounds):
+            rounds_run = r + 1
+            cap = round_cap(s, r)
+            comp, comp_to_root = _round_prep(labels, cap)
+            n_real = jnp.sum(labels == rows).astype(jnp.int32)
+            w, row, col, _ = _synth_candidates(comp_to_root, n_real, cap)
+            labels, eu, ev, ew, evalid = _merge_round_pre(
+                labels, w, row, col, comp_to_root
+            )
+            eus.append(eu)
+            evs.append(ev)
+            ews.append(ew)
+            evalids.append(evalid)
+            if (r + 1) % check_every == 0 or r == rounds - 1:
+                if bool(jnp.all(labels == 0)):
+                    break
+    edges = MSTEdges(
+        u=jnp.concatenate(eus),
+        v=jnp.concatenate(evs),
+        w=jnp.concatenate(ews),
+        valid=jnp.concatenate(evalids),
+    )
+    return edges, rounds_run
 
 
 def single_link_labels_distributed(

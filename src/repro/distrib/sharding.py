@@ -25,6 +25,43 @@ def make_flat_mesh(n_devices: int | None = None, axis: str = "data") -> Mesh:
     return Mesh(np.array(devs), (axis,))
 
 
+def make_pod_mesh(
+    n_pods: int,
+    pod_size: int | None = None,
+    axes: tuple[str, str] = ("pod", "data"),
+) -> Mesh:
+    """2-D (n_pods, pod_size) mesh — the two-tier collective layout.
+
+    Rows stay sharded over BOTH axes (``data_spec(axes, ...)`` flattens
+    them), but collectives that reduce per axis — the tiered 'component'
+    reduce — resolve the innermost ``data`` axis (intra-pod links) before
+    anything crosses the ``pod`` axis. ``pod_size=None`` divides the local
+    device count by ``n_pods``; non-power-of-two shapes like (2, 3) are
+    fine — only the product must not exceed the devices available.
+    """
+    if pod_size is None:
+        if len(jax.devices()) % n_pods:
+            raise ValueError(
+                f"{len(jax.devices())} devices do not split into {n_pods} pods"
+            )
+        pod_size = len(jax.devices()) // n_pods
+    devs = jax.devices()[: n_pods * pod_size]
+    if len(devs) < n_pods * pod_size:
+        raise ValueError(
+            f"need {n_pods * pod_size} devices for a ({n_pods}, {pod_size})"
+            f" pod mesh, have {len(devs)}"
+        )
+    return Mesh(np.array(devs).reshape(n_pods, pod_size), axes)
+
+
+def tier_sizes(mesh: Mesh, axes: tuple[str, ...]) -> tuple[int, ...]:
+    """Per-tier shard counts, outermost first: (n_pods, pod_size) on a pod
+    mesh, (P,) on a flat one. This tuple IS the tier topology — AOT caches
+    key on it so executables never survive a mesh reshape, and the analytic
+    shuffle accounting splits bytes across it."""
+    return tuple(int(mesh.shape[a]) for a in axes)
+
+
 def data_spec(axes: tuple[str, ...], ndim: int) -> P:
     """Shard dim 0 over (possibly multiple) mesh axes, replicate the rest."""
     return P(axes, *(None,) * (ndim - 1))

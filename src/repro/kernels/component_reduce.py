@@ -23,6 +23,14 @@ greater) OR (w equal AND row strictly lower) — global lexicographic
 (w desc, row asc). Empty segments get (f32.min, BIG_I, -1). Out-of-range
 component ids (pad rows are tagged with id == c) match no tile and
 contribute nothing.
+
+The same (w desc, row asc) total order governs every layer above this
+kernel: the engine's 'component' fold carry merges two winner sets with it
+(engine._component_merge), and the cross-shard reduce applies it per mesh
+axis — intra-pod first, then across pods on the per-pod winners only
+(engine._component_reduce, DESIGN.md §15). Because the order is total, the
+tiered fold is bit-identical to a flat one; this kernel's output contract
+(the empty sentinel included) is what makes that composition legal.
 """
 
 from __future__ import annotations

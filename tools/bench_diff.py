@@ -31,9 +31,14 @@ import sys
 # p99_ms / shed_rate are the serving SLO pair (bench_serve): tail latency of
 # accepted assign requests and the fraction shed at admission under the
 # fixed injected-stall overload scenario — both bounded by queue geometry,
-# so they gate like footprints rather than like free-running wall time
+# so they gate like footprints rather than like free-running wall time.
+# shuffle_bytes_intra / shuffle_bytes_cross are the two-tier collective
+# split (intra-pod links vs cross-pod, hac_parallel.shuffle_bytes_per_tier);
+# finalize_bytes is the reservoir's owner-scatter finalize footprint
+# (cluster.reservoir_finalize_bytes)
 ANALYTIC_KEYS = (
-    "shuffle_bytes", "peak_rss_mb", "center_dists_computed",
+    "shuffle_bytes", "shuffle_bytes_intra", "shuffle_bytes_cross",
+    "finalize_bytes", "peak_rss_mb", "center_dists_computed",
     "p99_ms", "shed_rate",
 )
 
