@@ -14,9 +14,16 @@ experimental grid on the synthetic 20_newsgroups analogue:
               certified by the dry-run roofline, not wall clock — DESIGN.md §7
   phase1    : matrix-free Buckshot phase 1 at paper scale (s=16k, d=2048) —
               the (s, s) sim matrix (1 GiB f32) never materializes
-  phase1_distributed : Borůvka phase 1 on a forced 4-device CPU mesh —
+  phase1_distributed : Borůvka phase 1 on forced multi-device CPU meshes —
               per-component pre-reduce (O(c·P) shuffle) vs per-row gather
-              (O(s·P)), wall clock + analytic per-round shuffle bytes
+              (O(s·P)), wall clock + analytic per-round shuffle bytes.
+              Also emits the phase1_merge rows (merge subsystem under an
+              RLIMIT_DATA budget, replicated twin recorded as
+              oom_under_budget) and the phase1_sharded row: the ring-sharded
+              candidate sweep (no (s, d) xs broadcast — DESIGN.md §16)
+              completing under a memory budget the replicated sweep dies
+              under, with bcast_bytes_per_round / sweep_peak_bytes_per_device
+              analytics gated by tools/bench_diff.py
 
 Environment:
   BENCH_SCALE   float, scales n for the '1GB' tables (default 0.08 -> n=20k;
@@ -458,6 +465,10 @@ def phase1_distributed():
        replicated point-level twin is launched under the SAME budget and
        its failure is recorded on the row — the headline "the replicated
        merge cannot run at this s" is demonstrated, not asserted.
+    3b. phase1_sharded: the same demonstration for the CANDIDATE SWEEP
+       (full driver, pod (2, 4) mesh, big d): sweep='sharded' (ring-rotated
+       column blocks, DESIGN.md §16) completes under a budget that kills
+       sweep='bcast' replicating the (s, d) sample to all 8 devices.
     4. reservoir_finalize: the streaming reservoir on the 4-device mesh,
        with the owner-scatter finalize's analytic bytes vs the legacy
        whole-payload gather (cluster.reservoir_finalize_bytes).
@@ -618,6 +629,107 @@ def phase1_distributed():
         f"shuffle_bytes_intra={c['intra']};"
         f"shuffle_bytes_cross={c['cross']};"
         f"replicated={replicated}")
+
+    # --- 3b: sharded candidate sweep vs the (s, d) broadcast wall ----------
+    # phase1_sharded: the FULL phase-1 driver (real candidate sweep, not the
+    # synthetic merge) on a pod (2, 4) mesh at a d where the replicated
+    # sweep's per-round (s, d) xs broadcast (P simultaneous copies) exceeds
+    # a hard RLIMIT_DATA budget while the ring-sharded sweep — resident
+    # (s/P, d) slice plus <= 3 rotating block copies, overlap=False — fits
+    # with headroom. Budgets calibrated empirically (SMALL shape: sharded
+    # 1.31 GB vs bcast 1.74 GB peak, the bcast child dies fast in XLA
+    # section allocation under 1.5 GB; full shape: sharded peaks 2.34 GB
+    # under the 2.5 GB budget while the bcast child thrashes to its
+    # timeout). Edge bit-parity between the
+    # two sweeps at every s both can run is a test invariant
+    # (tests/test_pod_scale.py); the child re-asserts it at a small s here
+    # so the bench row never reports a speedup over a wrong answer.
+    ss, sdim, sweep_budget_mb = (
+        (512, 65536, 1536) if SMALL else (1024, 65536, 2560)
+    )
+
+    def sweep_child(sweep: str) -> str:
+        return textwrap.dedent(f"""
+            import os, resource, time
+            budget = {sweep_budget_mb} * (1 << 20)
+            resource.setrlimit(resource.RLIMIT_DATA, (budget, budget))
+            os.environ["XLA_FLAGS"] = (
+                "--xla_force_host_platform_device_count=8")
+            os.environ.setdefault("JAX_PLATFORMS", "cpu")
+            import jax, numpy as np, jax.numpy as jnp
+            from repro.distrib.hac_parallel import (
+                boruvka_mst_distributed, bcast_bytes_per_round,
+                sweep_peak_bytes_per_device)
+            from repro.distrib.sharding import make_pod_mesh, mesh_axis_size
+
+            s, d = {ss}, {sdim}
+            mesh, axes = make_pod_mesh(2, 4), ("pod", "data")
+            P = mesh_axis_size(mesh, axes)
+
+            # parity canary at a cheap s (both sweeps fit): bit-identical
+            # edges or the row must not exist
+            small = jnp.asarray(np.random.default_rng(9).normal(
+                size=(96, 32)).astype(np.float32))
+            ea = boruvka_mst_distributed(
+                mesh, axes, small, sweep="sharded", prewarm=False)
+            eb = boruvka_mst_distributed(
+                mesh, axes, small, sweep="bcast", prewarm=False)
+            for a, b in zip(ea, eb):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+            rng = np.random.default_rng(5)
+            xs = jnp.asarray(rng.normal(size=(s, d)).astype(np.float32))
+            t0 = time.perf_counter()
+            e = boruvka_mst_distributed(
+                mesh, axes, xs, sweep="{sweep}", overlap=False,
+                prewarm=False)
+            jax.block_until_ready(e.u)
+            us = (time.perf_counter() - t0) * 1e6
+            peak = resource.getrusage(
+                resource.RUSAGE_SELF).ru_maxrss / 1024.0
+            rounds = e.u.shape[0] // s if e.u.shape[0] >= s else 1
+            bb = bcast_bytes_per_round(s, d, P, rounds, sweep="{sweep}")
+            pk = sweep_peak_bytes_per_device(
+                s, d, P, sweep="{sweep}", overlap=False)
+            print(f"RESULT {sweep} us={{us:.1f}} rounds={{rounds}}"
+                  f" peak_rss_mb={{peak:.1f}}"
+                  f" bcast_bytes_per_round={{bb[0]}}"
+                  f" sweep_peak_bytes_per_device={{pk}}")
+        """)
+
+    out_s, got_s = run_child(sweep_child("sharded"))
+    if out_s.returncode != 0 or "sharded" not in got_s:
+        print(f"# phase1_sharded: sharded sweep child failed\n{out_s.stderr}")
+        return
+    # a child over RLIMIT_DATA dies one of two ways: fast (LLVM section
+    # allocation aborts, rc=134 — the SMALL shape) or slow (the allocator
+    # keeps retrying under the limit and the child thrashes past its
+    # deadline — the full shape, hence the tight timeout). Both are the
+    # same demonstration: the replicated sweep cannot run under a budget
+    # the sharded one completes under.
+    try:
+        out_b, got_b = run_child(sweep_child("bcast"), timeout=1800)
+        replicated_sweep = (
+            f"ran_us={float(got_b['bcast']['us']):.1f}"
+            if out_b.returncode == 0 and "bcast" in got_b
+            else "oom_under_budget"
+        )
+    except subprocess.TimeoutExpired:
+        replicated_sweep = "timeout_under_budget"
+    if replicated_sweep.startswith("ran_us"):
+        print(f"# phase1_sharded: replicated sweep unexpectedly survived"
+              f" the {sweep_budget_mb} MB budget at s={ss}, d={sdim}"
+              f" ({replicated_sweep})")
+    sh = got_s["sharded"]
+    # what the bcast twin's round-0 broadcast would be (cap == s at round 0)
+    bcast_ref = 8 * (ss * sdim * 4 + ss * 4 + ss * 4)
+    row(f"phase1_sharded_s{ss}_d{sdim}_P2x4", float(sh["us"]),
+        f"rounds={sh['rounds']};budget_mb={sweep_budget_mb};"
+        f"peak_rss_mb={sh['peak_rss_mb']};"
+        f"bcast_bytes_per_round={sh['bcast_bytes_per_round']};"
+        f"sweep_peak_bytes_per_device={sh['sweep_peak_bytes_per_device']};"
+        f"bcast_twin_round0_bytes={bcast_ref};"
+        f"replicated={replicated_sweep}")
 
     # --- 4: reservoir finalize on the 4-device mesh ------------------------
     rn, rd, rchunks, rs = (

@@ -64,16 +64,25 @@ def main() -> None:
     if jax.device_count() > 1 and chunk % jax.device_count() == 0:
         from repro.core.sampling import buckshot_sample_size
         from repro.distrib.cluster import buckshot_distributed_stream
-        from repro.distrib.sharding import make_flat_mesh
+        from repro.distrib.sharding import make_flat_mesh, make_pod_mesh
 
-        mesh = make_flat_mesh()
+        nd = jax.device_count()
+        if nd >= 4 and nd % 2 == 0:
+            # pod mesh: collectives resolve intra-pod before anything
+            # crosses pods, and the sharded candidate sweep's ring rotates
+            # per tier (DESIGN.md §15-§16)
+            mesh, axes, layout = (
+                make_pod_mesh(2, nd // 2), ("pod", "data"), f"pod 2x{nd // 2}"
+            )
+        else:
+            mesh, axes, layout = make_flat_mesh(), ("data",), f"flat {nd}"
         res = buckshot_distributed_stream(
-            mesh, ("data",), xs, k, key,
+            mesh, axes, xs, k, key,
             sample_size=buckshot_sample_size(n, k), kmeans_iters=2,
         )
         pur = metrics.purity(jnp.asarray(res.assignment), labels, k, k)
-        print(f"\ndistributed streaming Buckshot ({jax.device_count()} "
-              f"devices): RSS={float(res.rss):8.2f}   purity={float(pur):.3f}")
+        print(f"\ndistributed streaming Buckshot ({layout} mesh): "
+              f"RSS={float(res.rss):8.2f}   purity={float(pur):.3f}")
     else:
         print("\n(more than one device — a count dividing the chunk size — "
               "unlocks the distributed streaming Buckshot; see the module "

@@ -325,9 +325,8 @@ def _merge_round_comp(
     return relabel, new_root, eu, ev, ew, evalid, n_real_new
 
 
-@jax.jit
 def _expand_round_edges(
-    slots: jax.Array,  # (s,) template fixing the expanded slot count
+    slots: jax.Array | int,  # (s,) template array OR the slot count itself
     eu: jax.Array,  # (cap,) compact edge slots, indexed by dense comp id
     ev: jax.Array,
     ew: jax.Array,
@@ -337,8 +336,25 @@ def _expand_round_edges(
     """Scatter one round's compact (cap,) edges into the (s,) point-id slot
     layout `_merge_round_pre` emits — the bit-parity bridge between the
     component-level and point-level merge paths (tests + cut compatibility).
+
+    ``slots`` may be the slot COUNT instead of a template array: the sharded
+    sweep (DESIGN.md §16) keeps no replicated (s,) point-level array at all,
+    so there is nothing to pass but the number itself.
     """
-    s = slots.shape[0]
+    s = slots if isinstance(slots, int) else slots.shape[0]
+    return _expand_round_edges_n(eu, ev, ew, evalid, comp_to_root, s=s)
+
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def _expand_round_edges_n(
+    eu: jax.Array,
+    ev: jax.Array,
+    ew: jax.Array,
+    evalid: jax.Array,
+    comp_to_root: jax.Array,
+    *,
+    s: int,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     propose = ew > NEG
     slot = jnp.where(propose, comp_to_root, s)
     eu_s = jnp.zeros((s,), jnp.int32).at[slot].set(eu, mode="drop")

@@ -780,6 +780,8 @@ def _phase1_init_centers(
     *,
     impl: str,
     hac: str,
+    sweep: str = "auto",
+    overlap: bool = True,
 ) -> jax.Array:
     """Buckshot phase 1 on the replicated (s, d) sample rows -> (k, d)
     initial centers. Shared by the resident and streaming distributed
@@ -790,12 +792,17 @@ def _phase1_init_centers(
       a scatter/gather round-trip. Same Borůvka rounds as core/buckshot.py.
     hac = "boruvka": phase 1's per-row edge search is sharded over the mesh
       (distrib/hac_parallel.py) — the paper's PARABLE partition+align, with an
-      O(log s) round guarantee. Same labels, bit-for-bit."""
+      O(log s) round guarantee. Same labels, bit-for-bit. ``sweep``/
+      ``overlap`` pass through to ``boruvka_mst_distributed`` — the default
+      ring-sharded sweep keeps per-device sample memory at O(s/P·d + c·d)
+      instead of replicating the (s, d) sample each round."""
     xs = l2_normalize(xs)
     if hac == "boruvka":
         from repro.distrib.hac_parallel import single_link_labels_distributed
 
-        labels = single_link_labels_distributed(mesh, axes, xs, k, impl=impl)
+        labels = single_link_labels_distributed(
+            mesh, axes, xs, k, impl=impl, sweep=sweep, overlap=overlap
+        )
         sums, counts = ops.label_stats(xs, labels, k, impl=impl)
         return jnp.where(counts[:, None] > 0, l2_normalize(sums), 0.0)
 
@@ -820,18 +827,22 @@ def buckshot_distributed(
     kmeans_iters: int = 3,
     impl: str = "xla",
     hac: str = "replicated",
+    sweep: str = "auto",
+    overlap: bool = True,
     sample_rows: jax.Array | None = None,
     bounded: bool | None = None,
 ) -> DistClusterResult:
     """Buckshot: distributed sample -> single-link HAC -> 2-3 distributed
-    K-Means iterations (phase-1 flavors: see ``_phase1_init_centers``).
+    K-Means iterations (phase-1 flavors: see ``_phase1_init_centers``;
+    ``sweep``/``overlap`` tune the hac='boruvka' candidate sweep).
 
     ``sample_rows`` (s, d) overrides the internal sampler — parity harness
     hook shared with ``buckshot_distributed_stream``."""
     if sample_rows is None:
         sample_rows = sample_rows_distributed(mesh, axes, x, w, sample_size, key)
     init_centers = _phase1_init_centers(
-        mesh, axes, sample_rows, k, impl=impl, hac=hac
+        mesh, axes, sample_rows, k, impl=impl, hac=hac, sweep=sweep,
+        overlap=overlap,
     )
     res = kmeans_distributed(
         mesh,
@@ -988,6 +999,8 @@ def buckshot_distributed_stream(
     kmeans_iters: int = 3,
     impl: str = "xla",
     hac: str = "replicated",
+    sweep: str = "auto",
+    overlap: bool = True,
     sample_rows: jax.Array | None = None,
     checkpoint=None,
     guard=None,
@@ -999,8 +1012,9 @@ def buckshot_distributed_stream(
     Phase 1's s = √(kn) sample comes from the sharded one-pass streaming
     reservoir (fold-mode 'topk' — one owner-scatter finalize for the whole
     sampling pass: scores gathered, winning rows moved once),
-    the sample HAC runs matrix-free on the replicated O(s·d) rows
-    (``_phase1_init_centers``), and phase 2 rides the streaming distributed
+    the sample HAC runs matrix-free (``_phase1_init_centers``; under
+    hac='boruvka' the default sharded sweep keeps its per-device sample
+    state at O(s/P·d)), and phase 2 rides the streaming distributed
     K-Means fold (chunks sharded on arrival, k·d across the wire once per
     pass). Peak device residency O(chunk·d/P + s·d + k·d) at any n.
 
@@ -1013,7 +1027,8 @@ def buckshot_distributed_stream(
             checkpoint=checkpoint, guard=guard,
         )
     init_centers = _phase1_init_centers(
-        mesh, axes, sample_rows, k, impl=impl, hac=hac
+        mesh, axes, sample_rows, k, impl=impl, hac=hac, sweep=sweep,
+        overlap=overlap,
     )
     result = kmeans_distributed_stream(
         mesh,

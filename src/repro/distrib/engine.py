@@ -40,7 +40,7 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.distrib.sharding import data_spec
+from repro.distrib.sharding import data_spec, ring_permutation
 
 
 def _component_reduce(v: dict, axes) -> dict:
@@ -49,9 +49,10 @@ def _component_reduce(v: dict, axes) -> dict:
     Each shard contributes its local winner per dense component id
     (ops.component_best_edge output; empty segments carry (f32.min, BIG_I,
     -1), which lose every comparison). Global row ids are unique across
-    shards, so after the (w, row) fold the winner is unique and its col
-    follows by one more pmin — three O(#components) collectives replace the
-    O(rows) per-row candidate gather.
+    shards, so after the (w, row) fold the winner is unique and every other
+    leaf of the subtree — 'col' plus any extra int32 payload such as the
+    sharded sweep's 'tcomp' target-component id — follows by one more pmin
+    each: O(#components) collectives replace the O(rows) per-row gather.
 
     The fold runs PER MESH AXIS, innermost first: on a (pod, data) mesh the
     'data' tier resolves each pod's winner over the fast intra-pod links,
@@ -61,13 +62,17 @@ def _component_reduce(v: dict, axes) -> dict:
     tiering changes where the bytes flow, not the answer.
     """
     big_i = jnp.iinfo(jnp.int32).max
+    payload = [k for k in v if k not in ("w", "row")]
     for ax in reversed(axes):  # innermost axis = intra-pod tier goes first
         w = jax.lax.pmax(v["w"], ax)
         on_max = v["w"] == w
         row = jax.lax.pmin(jnp.where(on_max, v["row"], big_i), ax)
         mine = jnp.logical_and(on_max, v["row"] == row)
-        col = jax.lax.pmin(jnp.where(mine, v["col"], big_i), ax)
-        v = {"w": w, "row": row, "col": jnp.where(col == big_i, -1, col)}
+        out = {"w": w, "row": row}
+        for k in payload:
+            pk = jax.lax.pmin(jnp.where(mine, v[k], big_i), ax)
+            out[k] = jnp.where(pk == big_i, -1, pk)
+        v = out
     return v
 
 
@@ -163,6 +168,67 @@ def run_job(
     return make_job(mesh, axes, map_combine, reduce_kinds, name=name)(data, bcast)
 
 
+# ------------------------------------------------------- sharded-bcast path
+
+
+def ring_sweep(
+    axes_sizes: tuple[tuple[str, int], ...],
+    block: Any,
+    fold: Callable[[Any, Any], Any],
+    acc: Any,
+    *,
+    overlap: bool = True,
+) -> Any:
+    """Visit every shard's row block of a dim-0-sharded pytree via nested
+    ppermute rings — the sharded-bcast data path (DESIGN.md §16).
+
+    Runs INSIDE a shard_map body. ``block`` is this shard's resident slice of
+    the sharded pytree; instead of replicating the full array to all shards
+    (the O(s·d) broadcast this combinator exists to kill), the blocks rotate
+    through the shards and ``fold(acc, visiting_block)`` consumes each one as
+    it arrives. Per-device residency never exceeds a few block slices; total
+    wire traffic equals one all-to-all of the sharded array, but as P
+    point-to-point hops of O(s/P·d) each instead of a P-way O(s·d) broadcast.
+
+    ``axes_sizes`` is ((axis, size), ...) OUTERMOST first (sharding.tier
+    order). On a (pod, data) mesh the traversal nests: the inner 'data' ring
+    rotates a COPY of the current panel around the pod's fast links, and
+    between inner rings the pristine panel rotates once across pods — each
+    device sees all P blocks after n_pods·pod_size fold steps.
+
+    ``overlap=True`` issues the next rotation BEFORE folding the block in
+    hand (the §11 double-buffered prefetch discipline applied to
+    collectives): the cross-pod panel exchange of outer step t is dispatched
+    while the whole intra-pod ring of step t computes, and each intra-pod
+    hop overlaps the previous block's fold. ``overlap=False`` threads the
+    accumulator through an optimization_barrier ahead of every rotation, so
+    the exchange cannot be scheduled before the fold completes. Both
+    schedules fold the same values in the same per-device order — callers
+    whose fold is order-independent (e.g. a total-order running max) get
+    bit-identical results with overlap on or off, which the pod-scale tests
+    enforce.
+    """
+    if not axes_sizes:
+        return fold(acc, block)
+    (ax, size), rest = axes_sizes[0], axes_sizes[1:]
+    perm = ring_permutation(size)
+    tmap = jax.tree_util.tree_map
+    cur = block
+    for step in range(size):
+        last = step == size - 1
+        if not last and overlap:
+            nxt = tmap(lambda v: jax.lax.ppermute(v, ax, perm), cur)
+        acc = ring_sweep(rest, cur, fold, acc, overlap=overlap)
+        if not last and not overlap:
+            # serialize: the rotation's operand now depends on the fold
+            # result, so the exchange cannot overlap the compute
+            cur, acc = jax.lax.optimization_barrier((cur, acc))
+            nxt = tmap(lambda v: jax.lax.ppermute(v, ax, perm), cur)
+        if not last:
+            cur = nxt
+    return acc
+
+
 # --------------------------------------------------------------- fold mode
 
 _MONOID: dict[str, Callable[[Any, Any], Any]] = {
@@ -203,12 +269,13 @@ def _component_merge(a: dict, b: dict) -> dict:
 
 def _check_component(subtree: Any) -> None:
     if not (
-        isinstance(subtree, dict) and set(subtree) == {"w", "row", "col"}
+        isinstance(subtree, dict) and {"w", "row", "col"} <= set(subtree)
     ):
         raise ValueError(
-            "'component' fold kind expects a {'w','row','col'} dict subtree"
-            " of per-segment winners (ops.component_best_edge layout), got"
-            f" {type(subtree).__name__}"
+            "'component' fold kind expects a dict subtree with at least"
+            " {'w','row','col'} per-segment winners"
+            " (ops.component_best_edge layout, extra int32 payload leaves"
+            f" allowed), got {type(subtree).__name__}"
         )
 
 

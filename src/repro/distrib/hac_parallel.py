@@ -11,13 +11,22 @@ The single-device machinery (merge round, edge cut, matrix-free candidate
 search) lives in core/hac.py — this module only lifts the per-round edge
 search onto the mesh:
 
-Layout: the s sample documents are replicated (s = sqrt(kn) is tiny next to
-the collection); each device owns a ROW BLOCK of the (s, s) similarity matrix,
-which never exists anywhere — not even per shard: ops.sim_best_edge folds the
-MXU similarity tiles straight into a per-row (max, argmax). Per round:
+Layout: each device owns a ROW BLOCK of the (s, s) similarity matrix, which
+never exists anywhere — not even per shard: ops.sim_best_edge folds the MXU
+similarity tiles straight into a per-row (max, argmax). Under the default
+SHARDED sweep (DESIGN.md §16) the columns are sharded too: each device keeps
+only its (s/P, d) slice resident and block copies rotate through the mesh via
+nested per-axis ppermute rings, so no (s, d) broadcast ever lands anywhere —
+per-device point memory is O(s/P·d + c·d), with c the halving component cap.
+``sweep='bcast'`` keeps the replicated-columns sweep (s = sqrt(kn) is small
+next to the collection, but its (s, d) broadcast is the first thing to hit a
+per-device memory wall — benchmarks/run.py phase1_sharded). Per round:
 
   map     : per-row best cross-component edge on the local rows
-            (kernels.ops.sim_best_edge — fused sim build+mask+rowmax+argmax)
+            (kernels.ops.sim_best_edge — fused sim build+mask+rowmax+argmax);
+            sharded sweep: a ring fold of the visiting column blocks keeping
+            the (w desc, global col asc) winner — bit-identical to the
+            replicated argmax, overlap=True prefetches the next hop
   combine : per-shard per-COMPONENT pre-reduce (ops.component_best_edge) —
             of the shard's O(s/P) candidates only O(#components) can survive
             the merge, so only those leave the shard (the paper's combiner
@@ -81,8 +90,14 @@ from repro.core.hac import (  # noqa: F401  (re-exported: historical home)
     cut_mst_edges,
     single_link_labels_boruvka,
 )
-from repro.distrib.engine import make_job
-from repro.distrib.sharding import mesh_axis_size, tier_sizes
+from repro.distrib.engine import make_job, ring_sweep
+from repro.distrib.sharding import (
+    mesh_axis_size,
+    ring_block_rows,
+    shard_rows,
+    tier_sizes,
+)
+from repro.resilience.checkpoint import carry_to_host
 from repro.kernels import ops
 from repro.kernels.ref import BIG_I as _BIG_I
 
@@ -97,23 +112,29 @@ def round_cap(s: int, r: int) -> int:
     return max(1, math.ceil(s / (1 << r)))
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=32)
 def _cand_job(
     mesh: Mesh, tiers: tuple[int, ...], axes: tuple[str, ...], impl: str,
-    mode: str,
+    mode: str, overlap: bool = False,
 ):
-    """Cached per-(mesh, tiers, axes, impl, mode) candidate job: host-chained
-    rounds re-enter the same jitted shard_map instead of re-tracing per call.
+    """Cached per-(mesh, tiers, axes, impl, mode, overlap) candidate job:
+    host-chained rounds re-enter the same jitted shard_map instead of
+    re-tracing per call. The cache is BOUNDED (long-lived serve processes
+    that reshape meshes must not leak one compiled job per topology forever)
+    and ``clear_job_caches`` empties it explicitly.
 
     ``tiers`` (sharding.tier_sizes) is the explicit tier topology — a mesh
     reshaped over the same devices (flat (8,) -> pod (2, 4)) lowers DIFFERENT
-    collectives for the tiered 'component' reduce, so the topology must be
-    part of the cache identity rather than an implicit property of the Mesh
-    hash. Modes: 'comp' (dense component ids end-to-end, compact merge),
-    'pre' (point labels + per-component pre-reduce), 'rowgather' (legacy
-    per-row gather).
+    collectives for the tiered 'component' reduce AND a different ring
+    schedule for the sharded sweep, so the topology must be part of the
+    cache identity rather than an implicit property of the Mesh hash.
+    Modes: 'comp_sharded' (ring-sharded sweep — no (s, d) xs broadcast,
+    blocks rotate via engine.ring_sweep; ``overlap`` selects the
+    double-buffered exchange schedule and is part of the identity because it
+    changes the lowered program), 'comp' (replicated sweep, dense component
+    ids end-to-end, compact merge), 'pre' (point labels + per-component
+    pre-reduce), 'rowgather' (legacy per-row gather).
     """
-    del tiers  # cache-key only: derived from (mesh, axes), pinned explicitly
 
     def cand_map(data, bcast):
         bj, bw = ops.sim_best_edge(
@@ -178,6 +199,70 @@ def _cand_job(
             )
         return {"best": {"w": w, "row": row, "col": col}}
 
+    def cand_map_comp_sharded(data, bcast):
+        # Ring-sharded sweep (DESIGN.md §16): no (s, d) xs broadcast and no
+        # (s,) comp broadcast exist anywhere. Each shard holds one (B, d) row
+        # block plus its rowid/comp slices; COPIES of the blocks rotate
+        # through the mesh via engine.ring_sweep while the resident slice
+        # stays put, so per-device point data is O(s/P·d) and the only
+        # replicated per-round state is the (cap,) comp_to_root map. The fold
+        # keeps the per-row running (w desc, global col asc) winner — the
+        # same total order the replicated argmax resolves ties by — so the
+        # result is bit-identical to cand_map_comp regardless of visit order.
+        # The winner's TARGET COMPONENT id rides along as reduce payload
+        # because no replicated comp array exists to look it up in later.
+        comp = data["comp"]
+        rowid = data["rowid"]
+        cap = bcast["comp_to_root"].shape[0]
+        b = comp.shape[0]
+        neg = float(jnp.finfo(jnp.float32).min)
+        acc0 = {
+            "w": jnp.full((b,), neg, jnp.float32),
+            "col": jnp.full((b,), _BIG_I, jnp.int32),
+            "tcomp": jnp.full((b,), -1, jnp.int32),
+        }
+        block = {"rows": data["rows"], "rowid": rowid, "comp": comp}
+
+        def fold(acc, vis):
+            # vis comp carries -1 on pad rows: the kernels mask those columns
+            # out of the map itself (negative col labels = padding contract)
+            bj, bw = ops.sim_best_edge(
+                data["rows"], vis["rows"], comp, vis["comp"], impl=impl,
+            )
+            bj = bj.astype(jnp.int32)
+            safe = jnp.maximum(bj, 0)
+            gcol = jnp.where(bj >= 0, vis["rowid"][safe], _BIG_I)
+            tc = jnp.where(bj >= 0, vis["comp"][safe], -1)
+            take = jnp.logical_or(
+                bw > acc["w"],
+                jnp.logical_and(bw == acc["w"], gcol < acc["col"]),
+            )
+            return {
+                "w": jnp.where(take, bw, acc["w"]),
+                "col": jnp.where(take, gcol, acc["col"]),
+                "tcomp": jnp.where(take, tc, acc["tcomp"]),
+            }
+
+        axes_sizes = tuple(zip(axes, tiers))
+        acc = ring_sweep(axes_sizes, block, fold, acc0, overlap=overlap)
+        bw = acc["w"]
+        bj = jnp.where(acc["col"] == _BIG_I, -1, acc["col"])
+        seg = jnp.where(comp < 0, cap, comp)
+        w, row, col = ops.component_best_edge(
+            bw, bj, rowid, seg, cap, impl=impl,
+        )
+        # same (w, rowid, seg) keys -> same per-segment winner: the second
+        # call only swaps the rider payload (target comp instead of col)
+        _, _, tcomp = ops.component_best_edge(
+            bw, acc["tcomp"], rowid, seg, cap, impl=impl,
+        )
+        return {"best": {"w": w, "row": row, "col": col, "tcomp": tcomp}}
+
+    if mode == "comp_sharded":
+        return make_job(
+            mesh, axes, cand_map_comp_sharded, {"best": "component"},
+            name="boruvka_cand_ring",
+        )
     if mode == "comp":
         return make_job(
             mesh, axes, cand_map_comp, {"best": "component"},
@@ -196,7 +281,7 @@ def _cand_job(
     )
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=32)
 def _relabel_job(mesh: Mesh, tiers: tuple[int, ...], axes: tuple[str, ...]):
     """Shard-local component relabel after a comp-mode merge: each device
     gathers its O(s/P) comp slice through the c-sized ``relabel`` broadcast.
@@ -323,6 +408,23 @@ def _cancel_pending(slots: list["_WarmSlot"]) -> None:
                 del _WARM[slot.key]
 
 
+def clear_job_caches() -> None:
+    """Drop every cached candidate/relabel job AND the AOT round-executable
+    table. The job caches are bounded (lru), but bounded is not zero: a
+    long-lived serve process that is done with a mesh topology can release
+    the compiled programs (MBs each) and the Mesh objects they pin
+    explicitly instead of waiting for eviction. Pending background compiles
+    are cancelled; one already inside XLA finishes and is then dropped."""
+    with _WARM_LOCK:
+        slots = list(_WARM.values())
+    _cancel_pending(slots)
+    with _WARM_LOCK:
+        _WARM.clear()
+        _WARM_ROUNDS_HINT.clear()
+    _cand_job.cache_clear()
+    _relabel_job.cache_clear()
+
+
 def _round_structs(
     mesh, axes, s: int, d: int, pad: int, cap: int, mode: str = "pre"
 ):
@@ -343,12 +445,16 @@ def _round_structs(
             shape, dtype, sharding=NamedSharding(mesh, spec)
         )
 
-    if mode == "comp":
+    if mode in ("comp", "comp_sharded"):
         data = {
             "rows": sd((s + pad, d), f32, True),
             "rowid": sd((s + pad,), i32, True),
             "comp": sd((s + pad,), i32, True),
         }
+        if mode == "comp_sharded":
+            # the whole point of the ring sweep: the ONLY replicated
+            # argument is the (cap,) comp_to_root map
+            return data, {"comp_to_root": sd((cap,), i32, False)}
         bcast = {
             "xs": sd((s, d), f32, False),
             "comp_all": sd((s,), i32, False),
@@ -413,6 +519,7 @@ def prewarm_candidate_rounds(
     pad: int,
     rounds: int,
     mode: str = "comp",
+    overlap: bool = False,
 ) -> list[_WarmSlot]:
     """Kick off background compilation of the candidate-job round shapes
     (the ROADMAP 'pre-warm the round shapes asynchronously' item): one
@@ -422,16 +529,19 @@ def prewarm_candidate_rounds(
     Cache keys carry the explicit tier topology (``sharding.tier_sizes``)
     alongside the Mesh: a reshape of the same devices into a different
     pod layout lowers different collectives, and a stale flat-mesh
-    executable must never serve a pod-mesh call (or vice versa)."""
+    executable must never serve a pod-mesh call (or vice versa). They also
+    carry the sweep ``mode`` and the ``overlap`` schedule — the ring sweep's
+    overlap=True/False programs differ (double-buffered ppermute vs
+    barrier-serialized), so each is its own executable identity."""
     tiers = tier_sizes(mesh, axes)
-    job = _cand_job(mesh, tiers, axes, impl, mode)
+    job = _cand_job(mesh, tiers, axes, impl, mode, overlap)
     slots = []
     todo = []
     with _WARM_LOCK:
         keys = set()
         for r in range(rounds):
             cap = round_cap(s, r)
-            key = (mesh, tiers, axes, impl, mode, s, d, pad, cap)
+            key = (mesh, tiers, axes, impl, mode, overlap, s, d, pad, cap)
             keys.add(key)
             slot = _WARM.get(key)
             if slot is None:
@@ -519,6 +629,62 @@ def shuffle_bytes_per_tier(
     return {"intra": intra, "cross": cross}
 
 
+def bcast_bytes_per_round(
+    s: int, d: int, n_shards: int, rounds: int, *,
+    sweep: str = "sharded", merge: str = "comp",
+) -> list[int]:
+    """Analytic per-round bytes REPLICATED onto the shards by the candidate
+    sweep — the broadcast the sharded sweep exists to kill (DESIGN.md §16).
+
+    sweep='bcast': every round lands the full (s, d) f32 xs, the (s,) i32
+    comp labels, and the (cap,) i32 comp_to_root on ALL n_shards devices —
+    n_shards·(s·d·4 + s·4 + cap·4) bytes per round, CONSTANT in r up to the
+    shrinking cap term. This is the O(s·d) replication wall the phase1_sharded
+    bench drives into an rlimit.
+
+    sweep='sharded': xs never replicates (blocks rotate peer-to-peer — that
+    traffic is the ring's shuffle, not broadcast); the only replicated
+    per-round state is the (cap,) comp_to_root in and, under merge='comp',
+    the (cap,) relabel map back — n_shards·(1 or 2)·cap·4 bytes, HALVING
+    with the Borůvka bound.
+    """
+    if sweep not in ("sharded", "bcast"):
+        raise ValueError(f"sweep must be 'sharded' or 'bcast', got {sweep!r}")
+    out = []
+    for r in range(rounds):
+        cap = round_cap(s, r)
+        if sweep == "bcast":
+            out.append(n_shards * (s * d * 4 + s * 4 + cap * 4))
+        else:
+            relabel = cap * 4 if merge == "comp" else 0
+            out.append(n_shards * (cap * 4 + relabel))
+    return out
+
+
+def sweep_peak_bytes_per_device(
+    s: int, d: int, n_shards: int, *, sweep: str = "sharded",
+    overlap: bool = True,
+) -> int:
+    """Analytic peak per-device residency of one candidate round's POINT
+    data (the (·, d) f32 arrays — label/id vectors are noise next to them).
+
+    sweep='bcast': the device's own (B, d) row slice plus the full (s, d)
+    replicated broadcast — B·d·4 + s·d·4, linear in s per device.
+
+    sweep='sharded': the own slice, the visiting block, and (overlap=True)
+    the prefetched next block plus the outer ring's pristine panel copy —
+    k·B·d·4 with k = 4 when overlapped, 3 when barrier-serialized, where
+    B = ring_block_rows(s, n_shards). Never a function of s beyond the
+    B = ceil(s/P) slice itself: that is the O(s/P·d + c·d) memory model.
+    """
+    if sweep not in ("sharded", "bcast"):
+        raise ValueError(f"sweep must be 'sharded' or 'bcast', got {sweep!r}")
+    b = ring_block_rows(s, n_shards)
+    if sweep == "bcast":
+        return b * d * 4 + s * d * 4
+    return (4 if overlap else 3) * b * d * 4
+
+
 def boruvka_mst_distributed(
     mesh: Mesh,
     axes: tuple[str, ...],
@@ -527,16 +693,48 @@ def boruvka_mst_distributed(
     impl: str = "xla",
     pre_reduce: bool = True,
     merge: str = "comp",
+    sweep: str = "auto",
+    overlap: bool = True,
     compact: bool = True,
     check_every: int = 3,
     prewarm: bool | None = None,
+    checkpoint=None,
+    pass_id: str = "boruvka_mst",
 ) -> MSTEdges:
     """Borůvka MST with the per-row edge search sharded over the mesh.
 
-    xs (s, d) replicated; each shard owns ~s/P rows of the edge search
-    (matrix-free — no (s, s) block exists on any device). Rounds are
-    host-chained like the paper's job driver, with a device-side early exit
-    synced to the host every ``check_every`` rounds.
+    Each shard owns ~s/P rows of the edge search (matrix-free — no (s, s)
+    block exists on any device). Rounds are host-chained like the paper's
+    job driver, with a device-side early exit synced to the host every
+    ``check_every`` rounds.
+
+    sweep selects how a shard's rows see the other shards' columns:
+      'sharded' (the 'auto' resolution whenever merge='comp' allows it):
+        the ring sweep of DESIGN.md §16 — xs is NEVER replicated; each
+        device keeps its (s/P, d) slice resident and block COPIES rotate
+        through the mesh via nested per-axis ppermute rings (outer = pod
+        hops, inner = intra-pod hops on a pod mesh). Per-device point
+        memory is O(s/P·d + c·d) and the only replicated per-round state
+        is the (cap,) comp_to_root map. Edges are bit-identical to
+        sweep='bcast' (same similarity bits, same (w desc, col asc) tie
+        order — tests/test_pod_scale.py).
+      'bcast': the replicated sweep — the full (s, d) xs broadcast lands
+        on every device each round. Kept for parity tests and as the
+        memory-wall twin in benchmarks (phase1_sharded rows).
+    overlap (sharded sweep only): dispatch the NEXT block's ring exchange
+    before folding the current block — the §11 double-buffered prefetch
+    discipline applied to collectives, so the ppermute hop hides behind
+    the fold's compute. The fold is order-independent, so overlap on/off
+    is bit-identical (enforced in tests); overlap=False serializes each
+    hop after the fold via an optimization barrier.
+
+    checkpoint (merge='comp' paths only): a resilience.Checkpointer; the
+    round loop snapshots its full carry — comp state (the sharded slice's
+    host gather under sweep='sharded'), comp_to_root, live count, and the
+    compact per-round edge lists — at every ``check_every`` host sync, and
+    resumes bit-identically from the last snapshot after a kill
+    (tests/test_pod_scale.py SIGKILL parity). The snapshot is deleted on
+    completion. ``pass_id`` namespaces it within the store.
 
     pre_reduce=True (default) folds each shard's candidates per component
     before anything crosses shards — O(#components) shuffle per round, with
@@ -567,11 +765,28 @@ def boruvka_mst_distributed(
     """
     if merge not in ("comp", "point"):
         raise ValueError(f"merge must be 'comp' or 'point', got {merge!r}")
+    if sweep not in ("auto", "sharded", "bcast"):
+        raise ValueError(
+            f"sweep must be 'auto', 'sharded' or 'bcast', got {sweep!r}"
+        )
     if not pre_reduce:
         merge = "point"  # row-gather candidates only exist at point level
     mode = {True: "comp" if merge == "comp" else "pre", False: "rowgather"}[
         pre_reduce
     ]
+    if sweep == "sharded" and mode != "comp":
+        raise ValueError(
+            "sweep='sharded' requires pre_reduce=True and merge='comp' "
+            "(the ring sweep carries component ids, not point labels)"
+        )
+    if mode == "comp" and sweep != "bcast":
+        mode = "comp_sharded"
+    overlap = bool(overlap) if mode == "comp_sharded" else False
+    if checkpoint is not None and mode not in ("comp", "comp_sharded"):
+        raise ValueError(
+            "checkpointed Borůvka requires merge='comp' (the comp-graph "
+            "carry is the snapshot unit)"
+        )
     s, d = xs.shape
     xs = l2_normalize(xs)
     n_shards = mesh_axis_size(mesh, axes)
@@ -581,25 +796,33 @@ def boruvka_mst_distributed(
         jnp.concatenate([xs, jnp.zeros((pad, d), xs.dtype)]) if pad else xs
     )
     rowid_p = jnp.arange(s + pad, dtype=jnp.int32)
-    job = _cand_job(mesh, tiers, axes, impl, mode)
+    if mode == "comp_sharded":
+        # place the row slices ONCE: the ring sweep never broadcasts them,
+        # and committed placement keeps every round's dispatch a no-op put
+        xs_p = shard_rows(mesh, axes, xs_p)
+        rowid_p = shard_rows(mesh, axes, rowid_p)
+    job = _cand_job(mesh, tiers, axes, impl, mode, overlap)
 
     rounds = _rounds_for(s)
     if prewarm is None:
         prewarm = _auto_prewarm()
     warm = None
-    hint_key = (mesh, tiers, axes, impl, mode, s, d, pad)
+    hint_key = (mesh, tiers, axes, impl, mode, overlap, s, d, pad)
     if pre_reduce and prewarm:
         with _WARM_LOCK:
             hint = _WARM_ROUNDS_HINT.get(hint_key)
         depth = rounds if hint is None else min(rounds, hint + check_every)
         warm = prewarm_candidate_rounds(
-            mesh, axes, impl, s=s, d=d, pad=pad, rounds=depth, mode=mode
+            mesh, axes, impl, s=s, d=d, pad=pad, rounds=depth, mode=mode,
+            overlap=overlap,
         ) + [None] * (rounds - depth)  # beyond the hint: sync-compile lazily
     try:
         edges, rounds_run = _boruvka_rounds(
             job, warm, mesh, axes, xs, xs_p, rowid_p, s, pad, rounds,
-            mode, compact, check_every,
+            mode, compact, check_every, checkpoint, pass_id,
         )
+        if checkpoint is not None:
+            checkpoint.delete(pass_id)  # the pass completed
         if warm is not None:
             with _WARM_LOCK:
                 _WARM_ROUNDS_HINT.pop(hint_key, None)  # re-insert as newest
@@ -614,7 +837,7 @@ def boruvka_mst_distributed(
 
 def _boruvka_rounds(
     job, warm, mesh, axes, xs, xs_p, rowid_p, s, pad, rounds,
-    mode, compact, check_every,
+    mode, compact, check_every, checkpoint=None, pass_id="boruvka_mst",
 ) -> tuple[MSTEdges, int]:
     """The host-chained round loop of ``boruvka_mst_distributed``.
 
@@ -624,15 +847,58 @@ def _boruvka_rounds(
     labels = jnp.arange(s, dtype=jnp.int32)
     pad_labels = jnp.full((pad,), -1, jnp.int32)
     # comp-mode state: dense component ids replace point labels end-to-end.
-    # The replicated (s,) comp_all survives ONLY as the candidate sweep's
-    # column-label broadcast (the O(s·d) sweep already replicates xs); the
-    # merge itself never builds point-level state.
+    # Under the replicated sweep the (s,) comp_all survives ONLY as the
+    # candidate sweep's column-label broadcast; under the sharded sweep not
+    # even that exists — comp_p is the device-resident slice, updated in
+    # place through the (cap,) relabel broadcast, and the reduce carries the
+    # winner's target comp so nothing ever gathers it.
     comp_all = jnp.arange(s, dtype=jnp.int32)
     comp_to_root = jnp.arange(s, dtype=jnp.int32)
     n_real = jnp.int32(s)
+    comp_p = None
+    relabel_job = None
+    if mode == "comp_sharded":
+        tiers = tier_sizes(mesh, axes)
+        relabel_job = _relabel_job(mesh, tiers, axes)
+        comp_p = shard_rows(
+            mesh, axes,
+            jnp.concatenate([comp_all, jnp.full((pad,), -1, jnp.int32)])
+            if pad else comp_all,
+        )
     eus, evs, ews, evalids = [], [], [], []
     rounds_run = 0
-    for r in range(rounds):
+    start_r = 0
+    ck_fp = None
+    if checkpoint is not None:
+        # structural fingerprint: the round schedule and every carry shape
+        # are functions of these, so a parameter change cold-starts instead
+        # of restoring into the wrong loop. The shapes themselves shrink
+        # per round (halving cap), hence a static string rather than
+        # carry_fingerprint.
+        d = xs.shape[1]
+        tiers = tier_sizes(mesh, axes)
+        ck_fp = (
+            f"boruvka:{mode}:tiers{tiers}:s{s}:d{d}:pad{pad}"
+            f":compact{int(compact)}:ck{check_every}"
+        )
+        snap = checkpoint.load(pass_id, fingerprint=ck_fp)
+        if snap is not None:
+            from repro.resilience.checkpoint import carry_from_host
+
+            carry = carry_from_host(snap["carry"])
+            start_r = int(snap["chunk"]) + 1
+            rounds_run = start_r
+            comp_to_root = carry["comp_to_root"]
+            n_real = carry["n_real"]
+            eus = list(carry["eu"])
+            evs = list(carry["ev"])
+            ews = list(carry["ew"])
+            evalids = list(carry["evalid"])
+            if mode == "comp_sharded":
+                comp_p = shard_rows(mesh, axes, carry["comp"])
+            else:
+                comp_all = carry["comp"]
+    for r in range(start_r, rounds):
         rounds_run = r + 1
         cap = round_cap(s, r)
         # pre-warmed AOT executable for this round's shapes if it landed
@@ -642,18 +908,31 @@ def _boruvka_rounds(
         # degrades to the jit fallback instead of hanging the round loop.
         slot = warm[r] if warm is not None else None
         ex = slot.result(_compile_timeout()) if slot is not None else None
-        if mode == "comp":
-            comp_p = (
-                jnp.concatenate([comp_all, jnp.full((pad,), -1, jnp.int32)])
-                if pad else comp_all
-            )
-            data = {"rows": xs_p, "rowid": rowid_p, "comp": comp_p}
-            bcast = {"xs": xs, "comp_all": comp_all,
-                     "comp_to_root": comp_to_root}
+        if mode in ("comp", "comp_sharded"):
+            if mode == "comp":
+                comp_p_r = (
+                    jnp.concatenate(
+                        [comp_all, jnp.full((pad,), -1, jnp.int32)]
+                    )
+                    if pad else comp_all
+                )
+                data = {"rows": xs_p, "rowid": rowid_p, "comp": comp_p_r}
+                bcast = {"xs": xs, "comp_all": comp_all,
+                         "comp_to_root": comp_to_root}
+            else:
+                data = {"rows": xs_p, "rowid": rowid_p, "comp": comp_p}
+                bcast = {"comp_to_root": comp_to_root}
             if ex is not None:
                 data, bcast = _place_round_args(mesh, axes, data, bcast)
             best = (job if ex is None else ex)(data, bcast)["best"]
-            tcomp = comp_all[jnp.maximum(best["col"], 0)]
+            # the ring sweep carries the winner's target comp through the
+            # reduce (no replicated comp_all exists to look it up in); the
+            # replicated sweep gathers it. Identical wherever col >= 0, and
+            # the merge never reads tcomp where col < 0 (no proposal).
+            tcomp = (
+                best["tcomp"] if mode == "comp_sharded"
+                else comp_all[jnp.maximum(best["col"], 0)]
+            )
             next_cap = round_cap(s, r + 1)
             relabel, new_root, eu, ev, ew, evalid, n_real = _merge_round_comp(
                 best["w"], best["row"], best["col"], tcomp, comp_to_root,
@@ -661,9 +940,15 @@ def _boruvka_rounds(
             )
             if not compact:
                 eu, ev, ew, evalid = _expand_round_edges(
-                    comp_all, eu, ev, ew, evalid, comp_to_root
+                    s if mode == "comp_sharded" else comp_all,
+                    eu, ev, ew, evalid, comp_to_root,
                 )
-            comp_all = relabel[comp_all]
+            if mode == "comp":
+                comp_all = relabel[comp_all]
+            else:
+                comp_p = relabel_job(
+                    {"comp": comp_p}, {"relabel": relabel}
+                )["comp"]
             comp_to_root = new_root
             done = n_real == 1
         elif mode == "pre":
@@ -708,6 +993,21 @@ def _boruvka_rounds(
         if (r + 1) % check_every == 0 or r == rounds - 1:
             if bool(done):
                 break
+            if checkpoint is not None:
+                # save only when CONTINUING: a snapshot therefore always
+                # points at a round the uninterrupted run executes, so a
+                # resume replays the identical round sequence (bit-parity).
+                # Completion deletes the snapshot in the driver.
+                carry = {
+                    "comp": comp_p if mode == "comp_sharded" else comp_all,
+                    "comp_to_root": comp_to_root,
+                    "n_real": n_real,
+                    "eu": eus, "ev": evs, "ew": ews, "evalid": evalids,
+                }
+                checkpoint.save(
+                    pass_id, chunk=r, carry_host=carry_to_host(carry),
+                    fingerprint=ck_fp,
+                )
     edges = MSTEdges(
         u=jnp.concatenate(eus),
         v=jnp.concatenate(evs),
@@ -841,9 +1141,11 @@ def synthetic_merge_rounds(
 
 def single_link_labels_distributed(
     mesh: Mesh, axes: tuple[str, ...], xs: jax.Array, k: int, *,
-    impl: str = "xla", pre_reduce: bool = True,
+    impl: str = "xla", pre_reduce: bool = True, sweep: str = "auto",
+    overlap: bool = True,
 ) -> jax.Array:
     edges = boruvka_mst_distributed(
-        mesh, axes, xs, impl=impl, pre_reduce=pre_reduce
+        mesh, axes, xs, impl=impl, pre_reduce=pre_reduce, sweep=sweep,
+        overlap=overlap,
     )
     return cut_mst_edges(edges, xs.shape[0], k)

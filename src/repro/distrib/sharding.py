@@ -67,6 +67,22 @@ def data_spec(axes: tuple[str, ...], ndim: int) -> P:
     return P(axes, *(None,) * (ndim - 1))
 
 
+def ring_permutation(size: int) -> list[tuple[int, int]]:
+    """ppermute pairs of a one-step rotation along a mesh axis: shard i's
+    block moves to shard i+1 (mod size), so ``size`` successive rotations
+    visit every block on every shard — the exchange schedule of the sharded
+    candidate sweep (engine.ring_sweep, DESIGN.md §16)."""
+    return [(i, (i + 1) % size) for i in range(size)]
+
+
+def ring_block_rows(s: int, n_shards: int) -> int:
+    """Rows of one ring block: the padded sample splits evenly, so every
+    visiting block (and therefore every ppermute hop) is the same
+    ceil-to-multiple slice — the unit of the sharded sweep's per-device
+    residency model O(s/P·d) (DESIGN.md §16)."""
+    return (s + ((-s) % n_shards)) // n_shards
+
+
 def replicated(ndim: int) -> P:
     del ndim
     return P()

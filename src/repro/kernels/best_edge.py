@@ -43,8 +43,10 @@ def _kernel(sim_ref, lr_ref, lc_ref, j_ref, s_ref, *, c_real: int, bc: int):
 
     col = j * bc + jax.lax.broadcasted_iota(jnp.int32, sim.shape, 1)
     keep = jnp.logical_and(
-        jnp.logical_and(lr != lc, lr >= 0),  # cross-component, unpadded row
-        col < c_real,  # unpadded column
+        # cross-component, unpadded row AND column (negative col labels are
+        # caller-side padding — same contract as ref.best_edge)
+        jnp.logical_and(jnp.logical_and(lr != lc, lr >= 0), lc >= 0),
+        col < c_real,  # tile-pad column
     )
     masked = jnp.where(keep, sim, NEG)
 

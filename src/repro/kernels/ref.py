@@ -388,7 +388,10 @@ def best_edge(
       labels_row: (r,) component label of each row point. NEGATIVE row labels
         mark padding: those rows propose nothing (-1, f32.min) — they are
         masked out of the map itself, not sliced off after a gather.
-      labels_col: (c,) component label of each column point.
+      labels_col: (c,) component label of each column point. NEGATIVE column
+        labels mark padding too: the sharded ring sweep visits PADDED row
+        blocks as its column set, and a zero pad column (sim 0.0) must never
+        outscore a real cross edge whose similarity is negative.
 
     Returns:
       best_j: (r,) int32 column index of the most similar point in a DIFFERENT
@@ -397,7 +400,11 @@ def best_edge(
     """
     neg = jnp.finfo(jnp.float32).min
     cross = jnp.logical_and(
-        labels_row[:, None] != labels_col[None, :], labels_row[:, None] >= 0
+        jnp.logical_and(
+            labels_row[:, None] != labels_col[None, :],
+            labels_row[:, None] >= 0,
+        ),
+        labels_col[None, :] >= 0,
     )
     masked = jnp.where(cross, sim.astype(jnp.float32), neg)
     best_j = jnp.argmax(masked, axis=1).astype(jnp.int32)

@@ -86,8 +86,11 @@ def _kernel(
 
         col = j * bc + jax.lax.broadcasted_iota(jnp.int32, sims.shape, 1)
         keep = jnp.logical_and(
-            jnp.logical_and(lr != lc, lr >= 0),  # cross-component, unpadded row
-            col < c_real,  # unpadded column
+            # cross-component, unpadded row AND column: negative col labels
+            # mark caller-side pad columns (ring-sweep visiting blocks), same
+            # contract as ref.best_edge
+            jnp.logical_and(jnp.logical_and(lr != lc, lr >= 0), lc >= 0),
+            col < c_real,  # tile-pad column
         )
         masked = jnp.where(keep, sims, NEG)
 
@@ -129,7 +132,8 @@ def sim_best_edge_pallas(
     xr = _pad_to(_pad_to(xs_rows, 0, br), 1, dmult)
     xc = _pad_to(_pad_to(xs_all, 0, bc), 1, dmult)
     lr = _pad_to(labels_row.astype(jnp.int32)[:, None] + 1, 0, br) - 1  # pad -> -1
-    # padded col labels are irrelevant: cols >= c are masked by c_real
+    # tile-pad col labels are irrelevant (cols >= c masked by c_real), but
+    # CALLER pad columns arrive as negative labels and the keep mask drops them
     lc = _pad_to(labels_col.astype(jnp.int32)[None, :], 1, bc)
     bd = min(max(dmult, (bd // dmult) * dmult), xr.shape[1])
     xr = _pad_to(xr, 1, bd)  # d-grid divisible; zero columns add nothing

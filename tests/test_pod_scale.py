@@ -1,6 +1,7 @@
 """Pod-scale phase 1 (8 simulated devices via subprocess): two-tier
-'component' collectives, the sharded component-graph merge, the owner-scatter
-reservoir finalize, and the tier-topology cache identity.
+'component' collectives, the sharded component-graph merge, the ring-sharded
+candidate sweep (overlap on/off), its SIGKILL resume parity, the
+owner-scatter reservoir finalize, and the tier/overlap cache identity.
 
 Everything here is a bit-exactness claim: the tiering/sharding changes where
 bytes flow and where state lives, never the answer (DESIGN.md §15). Meshes
@@ -201,6 +202,126 @@ def test_sharded_merge_edges_bit_identical():
     """, timeout=900)
 
 
+def test_sharded_sweep_edges_bit_identical():
+    """The ring-sharded candidate sweep (sweep='sharded': no (s, d) xs
+    broadcast, block copies rotate via per-axis ppermute rings) produces
+    BIT-IDENTICAL MSTEdges to the replicated sweep (sweep='bcast') — on
+    1-device, 4-device, non-power-of-two 6-device, and (3, 2) pod meshes,
+    at non-shard-multiple s (pad rows ride the ring with label -1), with
+    the overlapped exchange schedule both on and off."""
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.distrib.hac_parallel import boruvka_mst_distributed
+    from repro.distrib.sharding import make_flat_mesh, make_pod_mesh
+
+    rng = np.random.default_rng(7)
+    xs = jnp.asarray(rng.normal(size=(321, 24)).astype(np.float32))
+
+    def edges(mesh, axes, **kw):
+        e = boruvka_mst_distributed(
+            mesh, axes, xs, compact=False, prewarm=False, **kw)
+        return [np.asarray(v) for v in (e.u, e.v, e.w, e.valid)]
+
+    ref = edges(make_flat_mesh(1), ("data",), sweep="bcast")
+    assert int(ref[3].sum()) == 321 - 1
+    for mesh, axes, tag in (
+            (make_flat_mesh(1), ("data",), "flat1"),
+            (make_flat_mesh(4), ("data",), "flat4"),
+            (make_flat_mesh(6), ("data",), "flat6"),
+            (make_pod_mesh(3, 2), ("pod", "data"), "pod32")):
+        for overlap in (True, False):
+            got = edges(mesh, axes, sweep="sharded", overlap=overlap)
+            for a, b in zip(ref, got):
+                np.testing.assert_array_equal(
+                    a, b, err_msg=f"{tag} overlap={overlap}")
+    print("SHARDED SWEEP OK")
+    """, timeout=900)
+
+
+def test_sharded_sweep_sigkill_resume_bit_parity():
+    """SIGKILL a checkpointed sharded-sweep Borůvka run mid-pass (the carry
+    snapshot includes the sharded comp slice); the resumed run must produce
+    edges bit-identical to an uninterrupted oracle, actually restore from
+    the snapshot (not cold-start), and delete it on completion."""
+    import signal
+    import subprocess
+    import sys
+    import tempfile
+    import textwrap
+
+    kill_code = """
+    import os, signal, sys
+    import numpy as np, jax.numpy as jnp
+    from repro.distrib.hac_parallel import boruvka_mst_distributed
+    from repro.distrib.sharding import make_flat_mesh
+    from repro.resilience import DiskCheckpointer
+
+    class KillingCkpt(DiskCheckpointer):
+        saves = 0
+        def save(self, *a, **k):
+            super().save(*a, **k)
+            KillingCkpt.saves += 1
+            if KillingCkpt.saves >= 2:
+                os.kill(os.getpid(), signal.SIGKILL)
+
+    rng = np.random.default_rng(13)
+    xs = jnp.asarray(rng.normal(size=(256, 16)).astype(np.float32))
+    ck = KillingCkpt(os.environ["CKPT_DIR"], every=1)
+    boruvka_mst_distributed(
+        make_flat_mesh(4), ("data",), xs, check_every=1, prewarm=False,
+        checkpoint=ck)
+    raise SystemExit("survived the kill")
+    """
+    resume_code = """
+    import os
+    import numpy as np, jax.numpy as jnp
+    from repro.distrib.hac_parallel import boruvka_mst_distributed
+    from repro.distrib.sharding import make_flat_mesh
+    from repro.resilience import DiskCheckpointer
+
+    class Spy(DiskCheckpointer):
+        hit = None
+        def load(self, *a, **k):
+            out = super().load(*a, **k)
+            Spy.hit = out
+            return out
+
+    rng = np.random.default_rng(13)
+    xs = jnp.asarray(rng.normal(size=(256, 16)).astype(np.float32))
+    mesh = make_flat_mesh(4)
+    ck = Spy(os.environ["CKPT_DIR"], every=1)
+    got = boruvka_mst_distributed(
+        mesh, ("data",), xs, check_every=1, prewarm=False, checkpoint=ck)
+    assert Spy.hit is not None and Spy.hit["chunk"] >= 1, "cold start"
+    want = boruvka_mst_distributed(
+        mesh, ("data",), xs, check_every=1, prewarm=False)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not [f for f in os.listdir(os.environ["CKPT_DIR"])
+                if f.endswith(".ckpt")], "snapshot not deleted"
+    print("RESUME OK")
+    """
+    with tempfile.TemporaryDirectory() as tmp:
+        env = dict(ENV, CKPT_DIR=tmp)
+        cwd = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        killed = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(kill_code)],
+            capture_output=True, text=True, timeout=600, env=env, cwd=cwd,
+        )
+        assert killed.returncode == -signal.SIGKILL, (
+            f"rc={killed.returncode}\nSTDOUT:\n{killed.stdout}\n"
+            f"STDERR:\n{killed.stderr}")
+        assert [f for f in os.listdir(tmp) if f.endswith(".ckpt")], (
+            "kill left no snapshot")
+        out = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(resume_code)],
+            capture_output=True, text=True, timeout=600, env=env, cwd=cwd,
+        )
+        assert out.returncode == 0, (
+            f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}")
+        assert "RESUME OK" in out.stdout
+
+
 def test_synthetic_merge_rounds_comp_vs_point_parity():
     """The merge-only driver (synthetic pair-merge candidates): the sharded
     comp path and the replicated point path agree on round count, the exact
@@ -288,17 +409,57 @@ def test_tier_topology_is_part_of_cache_identity():
     j24 = hp._cand_job(m24, tier_sizes(m24, axes), axes, "xla", "comp")
     j42 = hp._cand_job(m42, tier_sizes(m42, axes), axes, "xla", "comp")
     assert j24 is not j42
+    # the ring sweep's overlap schedule is its own lowered program, so it is
+    # its own cache identity too
+    jov = hp._cand_job(
+        m24, tier_sizes(m24, axes), axes, "xla", "comp_sharded", True)
+    jser = hp._cand_job(
+        m24, tier_sizes(m24, axes), axes, "xla", "comp_sharded", False)
+    assert jov is not jser
 
     s, d, pad = 64, 4, 0
     for mesh in (m24, m42):
         slots = hp.prewarm_candidate_rounds(
             mesh, axes, "xla", s=s, d=d, pad=pad, rounds=1, mode="comp")
         assert slots[0].result() is not None
+    # _WARM key layout: (mesh, tiers, axes, impl, mode, overlap, s, d, pad, cap)
     with hp._WARM_LOCK:
         tiers_seen = {k[1] for k in hp._WARM
-                      if k[4] == "comp" and k[5] == s and k[6] == d}
+                      if k[4] == "comp" and k[6] == s and k[7] == d}
     assert {(2, 4), (4, 2)} <= tiers_seen, tiers_seen
     print("CACHE KEY OK")
+    """)
+
+
+def test_job_caches_bounded_and_clearable():
+    """The candidate/relabel job caches are bounded lru caches, and
+    ``clear_job_caches`` empties them plus the AOT executable table and the
+    rounds hint — nothing keeps pinning Mesh objects afterwards."""
+    _run("""
+    from repro.distrib import hac_parallel as hp
+    from repro.distrib.sharding import make_flat_mesh, tier_sizes
+
+    assert hp._cand_job.cache_info().maxsize == 32
+    assert hp._relabel_job.cache_info().maxsize == 32
+
+    mesh, axes = make_flat_mesh(4), ("data",)
+    tiers = tier_sizes(mesh, axes)
+    hp._cand_job(mesh, tiers, axes, "xla", "comp")
+    hp._relabel_job(mesh, tiers, axes)
+    slots = hp.prewarm_candidate_rounds(
+        mesh, axes, "xla", s=32, d=4, pad=0, rounds=1, mode="comp")
+    assert slots[0].result() is not None
+    assert hp._cand_job.cache_info().currsize > 0
+    assert hp._WARM
+
+    hp.clear_job_caches()
+    assert hp._cand_job.cache_info().currsize == 0
+    assert hp._relabel_job.cache_info().currsize == 0
+    assert not hp._WARM and not hp._WARM_ROUNDS_HINT
+    # caches repopulate cleanly after a clear
+    hp._cand_job(mesh, tiers, axes, "xla", "comp")
+    assert hp._cand_job.cache_info().currsize == 1
+    print("CACHE BOUND OK")
     """)
 
 

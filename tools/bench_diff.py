@@ -35,11 +35,15 @@ import sys
 # shuffle_bytes_intra / shuffle_bytes_cross are the two-tier collective
 # split (intra-pod links vs cross-pod, hac_parallel.shuffle_bytes_per_tier);
 # finalize_bytes is the reservoir's owner-scatter finalize footprint
-# (cluster.reservoir_finalize_bytes)
+# (cluster.reservoir_finalize_bytes); bcast_bytes_per_round /
+# sweep_peak_bytes_per_device are the sharded candidate sweep's replication
+# and residency models (hac_parallel, DESIGN.md §16) — a change that quietly
+# reintroduces the (s, d) broadcast trips these long before wall time moves
 ANALYTIC_KEYS = (
     "shuffle_bytes", "shuffle_bytes_intra", "shuffle_bytes_cross",
     "finalize_bytes", "peak_rss_mb", "center_dists_computed",
-    "p99_ms", "shed_rate",
+    "p99_ms", "shed_rate", "bcast_bytes_per_round",
+    "sweep_peak_bytes_per_device",
 )
 
 # analytic keys where MORE is better (e.g. the fraction of rows the bounds
